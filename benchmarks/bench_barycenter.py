@@ -1,0 +1,65 @@
+"""Paper Fig. 11 (App. C.3): Wasserstein-barycenter approximation error of
+Spar-IBP vs IBP across eps and s (paper's b1/b2/b3 mixture setting)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, log, timed
+from repro.core import gibbs_kernel, ibp, normalize_cost, spar_ibp, squared_euclidean_cost
+from repro.core.spar_sink import s0
+
+
+def _measures(n, d, seed=0):
+    """b1 ~ N(1/5, 1/50); b2 ~ mixture; b3 ~ t5(3/5, 1/100) (paper App C.3)."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(size=(n, d))
+    proj = x[:, 0]
+    def hist(w):
+        w = np.abs(w)
+        w = w + 1e-2 * w.max()
+        return w / w.sum()
+    b1 = hist(np.exp(-((proj - 0.2) ** 2) / (2 / 50)))
+    b2 = hist(0.5 * np.exp(-((proj - 0.5) ** 2) / (2 / 60))
+              + 0.5 * np.exp(-((proj - 0.8) ** 2) / (2 / 80)))
+    b3 = hist(np.exp(-((proj - 0.6) ** 2) / (2 / 100)))
+    return jnp.asarray(np.stack([b1, b2, b3])), jnp.asarray(x)
+
+
+def run(n=500, d=5, eps_grid=(0.05, 0.01), mults=(5, 20), n_rep=5):
+    for eps in eps_grid:
+        bs, x = _measures(n, d)
+        C, _ = normalize_cost(squared_euclidean_cost(x, x))
+        K = gibbs_kernel(C, eps)
+        Ks = jnp.stack([K] * 3)
+        w = jnp.full((3,), 1.0 / 3.0)
+        ref, t_ref = timed(ibp, Ks, bs, w, tol=1e-9, max_iter=5000)
+        emit(f"fig11/eps{eps:g}/ibp", t_ref * 1e6, f"iters={int(ref.n_iter)}")
+        for mult in mults:
+            s = mult * s0(n)
+            errs, t = [], 0.0
+            for i in range(n_rep):
+                (res, nnz), dt = timed(spar_ibp, jax.random.PRNGKey(i), Ks, bs, w,
+                                       float(s), tol=1e-9, max_iter=5000)
+                errs.append(float(jnp.abs(res.q - ref.q).sum()))
+                t += dt
+            emit(f"fig11/eps{eps:g}/spar_ibp/s{mult}x", t / n_rep * 1e6,
+                 f"l1err={np.mean(errs):.4f} speed={t_ref/(t/n_rep):.1f}x")
+        log(f"Fig11 eps={eps} done")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        run(n=1000, eps_grid=(0.05, 0.01, 0.002), mults=(5, 10, 15, 20), n_rep=10)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

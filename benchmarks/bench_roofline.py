@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_singlepod.json / dryrun_multipod.json (written by
+``python -m repro.launch.dryrun --all --out ...``) and prints, per
+(arch x shape): the three roofline terms, the bottleneck, the
+MODEL_FLOPS/HLO_FLOPS ratio, and the roofline fraction
+t_compute / max(all terms).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import emit, log
+
+
+def best_artifact() -> str:
+    """Prefer scan-corrected, optimized cost records when present."""
+    for p in ("dryrun_cost_optimized.json", "dryrun_cost.json",
+              "dryrun_singlepod.json"):
+        if os.path.exists(p):
+            return p
+    return "dryrun_singlepod.json"
+
+
+def summarize(path: str, tag: str):
+    if not os.path.exists(path):
+        log(f"(skip {tag}: {path} not found — run repro.launch.dryrun first)")
+        return []
+    with open(path) as f:
+        records = json.load(f)
+    rows = []
+    for r in records:
+        tc, tm, tl = r["t_compute"], r["t_memory"], r["t_collective"]
+        bound = max(tc, tm, tl)
+        frac = tc / bound if bound > 0 else 0.0
+        rows.append((r["arch"], r["shape"], tc, tm, tl, r["bottleneck"], frac,
+                     r.get("useful_flops_ratio")))
+        emit(
+            f"roofline/{tag}/{r['arch']}/{r['shape']}",
+            bound * 1e6,
+            f"compute={tc:.3g}s memory={tm:.3g}s collective={tl:.3g}s "
+            f"bottleneck={r['bottleneck']} roofline_frac={frac:.3f}",
+        )
+    worst = sorted(rows, key=lambda x: x[6])[:3]
+    log(f"[{tag}] worst roofline fractions: " +
+        ", ".join(f"{a}/{s}={f:.3f}" for a, s, *_, f, _u in worst))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--singlepod", default="dryrun_singlepod.json")
+    ap.add_argument("--multipod", default="dryrun_multipod.json")
+    args = ap.parse_args()
+    summarize(args.singlepod, "1pod")
+    summarize(args.multipod, "2pod")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Framework benchmark: MoE routing quality/cost — softmax vs Sinkhorn vs
+Spar-Sink routers (the paper's technique inside the LM stack)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, log, timed
+from repro import configs
+from repro.models.moe import sinkhorn_router_probs
+
+
+def _imbalance(probs, k):
+    _, idx = jax.lax.top_k(probs, k)
+    e = probs.shape[-1]
+    counts = np.bincount(np.asarray(idx).ravel(), minlength=e).astype(float)
+    return counts.std() / max(counts.mean(), 1e-9)
+
+
+def run(n_tokens=2048, skew=3.0):
+    cfg = configs.get("olmoe_1b_7b:smoke")
+    key = jax.random.PRNGKey(0)
+    scores = jax.random.normal(key, (1, n_tokens, cfg.num_experts)) * skew
+    scores = scores + jnp.linspace(0, 4.0, cfg.num_experts)[None, None, :]
+    k = cfg.experts_per_token
+
+    p_soft, t = timed(jax.jit(lambda s: jax.nn.softmax(s, -1)), scores, n_rep=5)
+    emit("router/softmax", t * 1e6, f"imbalance={_imbalance(p_soft, k):.3f}")
+
+    for router, frac in (("sinkhorn", 1.0), ("spar_sink", 0.5), ("spar_sink", 0.25)):
+        c = cfg.replace(router=router, router_sample_frac=frac)
+        fn = jax.jit(lambda s: sinkhorn_router_probs(s, c, jax.random.PRNGKey(1)))
+        p, t = timed(fn, scores, n_rep=5)
+        name = router if router == "sinkhorn" else f"{router}_{frac:g}"
+        emit(f"router/{name}", t * 1e6, f"imbalance={_imbalance(p, k):.3f}")
+    log("router bench done")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(n_tokens=8192 if args.full else 2048)
+
+
+if __name__ == "__main__":
+    main()

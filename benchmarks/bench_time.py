@@ -1,0 +1,79 @@
+"""Paper Fig. 5: wall time vs n — Sinkhorn vs Spar-Sink (and the fused
+online-kernel Sinkhorn, our beyond-paper dense baseline). On this CPU
+container the absolute numbers are illustrative; the scaling exponent is
+the claim under test: Sinkhorn iterations are O(n^2), Spar-Sink O(s)=O~(n).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, log, timed
+from repro.core import gibbs_kernel, normalize_cost, s0, sinkhorn, squared_euclidean_cost
+from repro.core.sparsify import ot_sampling_probs, sparsify_coo, coo_matvec, coo_rmatvec
+from repro.core.spar_sink import default_cap
+from repro.data import make_measures
+
+
+def _iter_time_dense(K, a, b, iters=20):
+    f = jax.jit(lambda K, v: (a / (K @ v)) * 0 + (K @ v))  # one matvec pair proxy
+
+    def body(K, v):
+        u = a / jnp.maximum(K @ v, 1e-300)
+        return b / jnp.maximum(K.T @ u, 1e-300)
+
+    run = jax.jit(lambda K, v: jax.lax.fori_loop(0, iters, lambda i, vv: body(K, vv), v))
+    v0 = jnp.ones_like(b)
+    _, t = timed(run, K, v0, n_rep=3)
+    return t / iters
+
+
+def _iter_time_sparse(sk, a, b, iters=20):
+    def body(v):
+        u = a / jnp.maximum(coo_matvec(sk, v), 1e-300)
+        return b / jnp.maximum(coo_rmatvec(sk, u), 1e-300)
+
+    run = jax.jit(lambda v: jax.lax.fori_loop(0, iters, lambda i, vv: body(vv), v))
+    v0 = jnp.ones_like(b)
+    _, t = timed(run, v0, n_rep=3)
+    return t / iters
+
+
+def run(ns=(800, 1600, 3200), d=5, eps=0.1):
+    dense_t, sparse_t = [], []
+    for n in ns:
+        a, b, x = make_measures("C1", n, d, seed=0)
+        a, b = jnp.asarray(a), jnp.asarray(b)
+        C, _ = normalize_cost(squared_euclidean_cost(jnp.asarray(x), jnp.asarray(x)))
+        K = gibbs_kernel(C, eps)
+        td = _iter_time_dense(K, a, b)
+        s = 8 * s0(n)
+        probs = ot_sampling_probs(a, b)
+        sk = sparsify_coo(jax.random.PRNGKey(0), K, probs, float(s), default_cap(s))
+        ts = _iter_time_sparse(sk, a, b)
+        dense_t.append(td)
+        sparse_t.append(ts)
+        emit(f"fig5/n{n}/sinkhorn_iter", td * 1e6, f"nnz={n*n}")
+        emit(f"fig5/n{n}/spar_sink_iter", ts * 1e6,
+             f"nnz={int(sk.nnz)} speedup={td/ts:.1f}x")
+    # empirical scaling exponents (log-log slope)
+    ln = np.log(np.asarray(ns, float))
+    slope_d = np.polyfit(ln, np.log(dense_t), 1)[0]
+    slope_s = np.polyfit(ln, np.log(sparse_t), 1)[0]
+    emit("fig5/scaling_exponent/sinkhorn", 0.0, f"slope={slope_d:.2f} (expect ~2)")
+    emit("fig5/scaling_exponent/spar_sink", 0.0, f"slope={slope_s:.2f} (expect ~1)")
+    log(f"Fig5 slopes: dense {slope_d:.2f}, sparse {slope_s:.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(ns=(800, 1600, 3200, 6400, 12800) if args.full else (800, 1600, 3200))
+
+
+if __name__ == "__main__":
+    main()

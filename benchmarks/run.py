@@ -1,0 +1,53 @@
+"""Benchmark aggregator: one reduced run per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV on stdout (progress on stderr).
+Full-size variants: ``python -m benchmarks.bench_<x> --full``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_barycenter,
+        bench_echo,
+        bench_rmae_ot,
+        bench_rmae_uot,
+        bench_rmae_vs_n,
+        bench_roofline,
+        bench_router,
+        bench_time,
+    )
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("fig2 (RMAE OT vs s)", lambda: bench_rmae_ot.run(
+            n=500, d=5, mults=(2, 8), n_rep=5, eps_grid=(1e-1, 1e-2), patterns=("C1",))),
+        ("fig3 (RMAE UOT vs s)", lambda: bench_rmae_uot.run(
+            patterns=("C1",), regimes=("R2",), n=500, mults=(2, 8), n_rep=4)),
+        ("fig4 (RMAE vs n)", lambda: bench_rmae_vs_n.run(ns=(400, 800), n_rep=4)),
+        ("fig5 (time vs n)", lambda: bench_time.run(ns=(800, 1600, 3200))),
+        ("fig11 (barycenters)", lambda: bench_barycenter.run(
+            n=400, eps_grid=(0.05,), mults=(5, 20), n_rep=4)),
+        ("table1 (echo ED prediction)", lambda: bench_echo.run(
+            n_videos=3, size=48, stride=3, methods=("sinkhorn", "spar_sink"),
+            s_mult=16)),
+        ("router (MoE spar-sink)", lambda: bench_router.run(n_tokens=1024)),
+        ("roofline (dry-run artifacts)", lambda: bench_roofline.summarize(
+            bench_roofline.best_artifact(), "1pod")),
+    ]
+    t0 = time.time()
+    for name, fn in suites:
+        print(f"--- {name} ---", file=sys.stderr)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — a suite failure must not hide others
+            print(f"SUITE FAILED {name}: {e!r}", file=sys.stderr)
+            print(f"suite_error/{name.split()[0]},0.0,{e!r}")
+    print(f"total bench time: {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Wasserstein barycenters with Spar-IBP (paper Appendix A / C.3) on 1-D
+mixtures embedded in R^d: IBP vs Spar-IBP accuracy and speed.
+
+    PYTHONPATH=src python examples/barycenter.py
+"""
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gibbs_kernel, ibp, normalize_cost, spar_ibp, squared_euclidean_cost
+from repro.core.spar_sink import s0
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, m, d = 800, 3, 5
+    x = jnp.asarray(rng.uniform(size=(n, d)))
+    proj = np.asarray(x[:, 0])
+
+    def hist(w):
+        w = np.abs(w) + 1e-2 * np.abs(w).max()
+        return w / w.sum()
+
+    bs = jnp.asarray(np.stack([
+        hist(np.exp(-((proj - 0.2) ** 2) / (2 / 50))),
+        hist(0.5 * np.exp(-((proj - 0.5) ** 2) / (2 / 60))
+             + 0.5 * np.exp(-((proj - 0.8) ** 2) / (2 / 80))),
+        hist(np.exp(-((proj - 0.6) ** 2) / (2 / 100))),
+    ]))
+    w = jnp.full((m,), 1.0 / m)
+    eps = 0.01
+    C, _ = normalize_cost(squared_euclidean_cost(x, x))
+    Ks = jnp.stack([gibbs_kernel(C, eps)] * m)
+
+    t0 = time.perf_counter()
+    ref = ibp(Ks, bs, w, tol=1e-9, max_iter=5000)
+    t_ibp = time.perf_counter() - t0
+    print(f"IBP:      {int(ref.n_iter)} iters, {t_ibp:.2f}s")
+
+    for mult in (5, 20):
+        s = mult * s0(n)
+        t0 = time.perf_counter()
+        res, nnz = spar_ibp(jax.random.PRNGKey(0), Ks, bs, w, float(s),
+                            tol=1e-9, max_iter=5000)
+        t_s = time.perf_counter() - t0
+        err = float(jnp.abs(res.q - ref.q).sum())
+        print(f"Spar-IBP s={mult}x s0: {int(res.n_iter)} iters, {t_s:.2f}s "
+              f"({t_ibp / t_s:.1f}x), L1 err vs IBP = {err:.4f}, "
+              f"nnz/kernel = {[int(v) for v in nnz]}")
+    print("note: at n=800 a dense 800x800 matvec is BLAS-trivial, so the "
+          "O(s) path only wins wall-clock at larger n — see "
+          "benchmarks/bench_time.py for the scaling-exponent measurement "
+          "(dense ~n^2+, sparse ~n log^4 n).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver: train a ~100M-parameter MoE LM whose router solves a
+token-expert OT problem with (Spar-)Sinkhorn — the paper's technique as a
+first-class framework feature.
+
+Default is a CPU-sized run; ``--hundred-m`` selects the ~100M config and a
+few hundred steps (the deliverable-scale run; give it a few hours on CPU,
+minutes on real accelerators):
+
+    PYTHONPATH=src python examples/train_moe_sinkhorn.py              # smoke
+    PYTHONPATH=src python examples/train_moe_sinkhorn.py --hundred-m  # full
+"""
+import argparse
+
+from repro import configs
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.launch.mesh import make_test_mesh
+from repro.launch.train import train_loop
+
+HUNDRED_M = ModelConfig(
+    name="moe_100m_sinkhorn",
+    family="moe",
+    num_layers=8,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=32768,
+    num_experts=16,
+    experts_per_token=2,
+    router="spar_sink",  # the paper's sparsified Sinkhorn router
+    router_sample_frac=0.5,
+    remat="none",
+)  # ~105M params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--router", default="spar_sink",
+                    choices=["softmax", "sinkhorn", "spar_sink"])
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_moe_ckpt")
+    args = ap.parse_args()
+
+    if args.hundred_m:
+        cfg = HUNDRED_M.replace(router=args.router)
+        tcfg = TrainConfig(seq_len=512, global_batch=8, lr=6e-4,
+                           total_steps=args.steps or 300, warmup_steps=20,
+                           checkpoint_every=100, checkpoint_dir=args.ckpt_dir)
+    else:
+        cfg = configs.get("olmoe_1b_7b:smoke").replace(router=args.router)
+        tcfg = TrainConfig(seq_len=128, global_batch=8, lr=1e-3,
+                           total_steps=args.steps or 60, warmup_steps=5,
+                           checkpoint_every=50, checkpoint_dir=args.ckpt_dir)
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    _, history = train_loop(cfg, tcfg, make_test_mesh(d, m))
+    first, last = history[0][1]["loss"], history[-1][1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} with router={args.router}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Architecture registry. ``repro.configs.get("<arch>")`` / ``"<arch>:smoke"``."""
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    SUBQUADRATIC,
+    ModelConfig,
+    TrainConfig,
+    cells,
+    get,
+    shape_of,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "SHAPES",
+    "SUBQUADRATIC",
+    "ModelConfig",
+    "TrainConfig",
+    "cells",
+    "get",
+    "shape_of",
+]

@@ -1,0 +1,76 @@
+"""Spar-Sink core: the paper's contribution as a composable JAX library."""
+from repro.core.geometry import (
+    euclidean_cost,
+    gibbs_kernel,
+    grid_support_2d,
+    log_gibbs_kernel,
+    normalize_cost,
+    squared_euclidean_cost,
+    wfr_cost,
+    wfr_log_kernel,
+)
+from repro.core.sinkhorn import (
+    SinkhornResult,
+    entropy,
+    kl_divergence,
+    ot_cost_from_plan,
+    plan_from_potentials,
+    plan_from_scalings,
+    sinkhorn,
+    sinkhorn_log,
+    sinkhorn_uot,
+    sinkhorn_uot_log,
+    uot_cost_from_plan,
+)
+from repro.core.spar_sink import (
+    SparSinkSolution,
+    default_cap,
+    s0,
+    spar_sink_ot,
+    spar_sink_uot,
+)
+from repro.core.sparsify import (
+    ot_sampling_probs,
+    uniform_probs,
+    uot_sampling_probs,
+)
+from repro.core.barycenter import ibp, spar_ibp
+from repro.core.baselines import greenkhorn, nys_sink, screenkhorn_lite
+from repro.core.divergence import sinkhorn_divergence, spar_sink_divergence
+
+__all__ = [
+    "SinkhornResult",
+    "SparSinkSolution",
+    "default_cap",
+    "entropy",
+    "euclidean_cost",
+    "gibbs_kernel",
+    "greenkhorn",
+    "grid_support_2d",
+    "ibp",
+    "kl_divergence",
+    "log_gibbs_kernel",
+    "normalize_cost",
+    "nys_sink",
+    "ot_cost_from_plan",
+    "ot_sampling_probs",
+    "plan_from_potentials",
+    "plan_from_scalings",
+    "s0",
+    "screenkhorn_lite",
+    "sinkhorn",
+    "sinkhorn_divergence",
+    "sinkhorn_log",
+    "sinkhorn_uot",
+    "sinkhorn_uot_log",
+    "spar_ibp",
+    "spar_sink_divergence",
+    "spar_sink_ot",
+    "spar_sink_uot",
+    "squared_euclidean_cost",
+    "uniform_probs",
+    "uot_cost_from_plan",
+    "uot_sampling_probs",
+    "wfr_cost",
+    "wfr_log_kernel",
+]

@@ -1,0 +1,13 @@
+"""Data substrate: deterministic synthetic pipelines (tokens, point clouds,
+echo videos). Stateless and seed-addressed => exact replay after restart."""
+from repro.data.pipeline import TokenPipeline
+from repro.data.pointclouds import make_measures, make_uot_measures, wfr_eta_for_density
+from repro.data.echo import synth_echo_video
+
+__all__ = [
+    "TokenPipeline",
+    "make_measures",
+    "make_uot_measures",
+    "synth_echo_video",
+    "wfr_eta_for_density",
+]

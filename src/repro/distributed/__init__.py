@@ -1,0 +1,18 @@
+"""Distributed runtime: mesh-axis policy, sharding rules, collectives."""
+from repro.distributed.sharding import (
+    batch_specs,
+    decode_state_specs,
+    dp_axes,
+    named,
+    param_specs,
+    tp_axis,
+)
+
+__all__ = [
+    "batch_specs",
+    "decode_state_specs",
+    "dp_axes",
+    "named",
+    "param_specs",
+    "tp_axis",
+]

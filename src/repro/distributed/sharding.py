@@ -1,0 +1,227 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP over the production mesh.
+
+Mesh axes:
+* single pod : ("data", "model")          — 16 x 16 = 256 chips
+* multi-pod  : ("pod", "data", "model")   — 2 x 16 x 16 = 512 chips
+
+Policy (hierarchical, DCN-aware):
+* batch (DP)  over ("pod", "data") — pure DP across pods (gradient
+  all-reduce is the only cross-pod collective; it rides DCN),
+* params FSDP over "data" (fast ICI), TP/EP over "model",
+* long-context decode (batch=1) shards the cache/sequence axis over "data"
+  (SP) where divisible.
+
+Rules are name-driven with a size-driven generic fallback, so every param of
+every architecture gets a legal spec (dims not divisible by the axis size are
+left unsharded rather than relying on GSPMD padding).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "dp_axes",
+    "tp_axis",
+    "param_specs",
+    "batch_specs",
+    "decode_state_specs",
+    "named",
+    "active_mesh",
+    "constrain",
+]
+
+
+def active_mesh() -> Mesh | None:
+    """The mesh installed by ``with mesh:`` around the current jit trace
+    (None outside any mesh — smoke tests on one device)."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover - jax internals moved
+        return None
+
+
+def constrain(x, dims: tuple) -> "jax.Array":
+    """with_sharding_constraint by *logical* dim tags, no-op without a mesh.
+
+    ``dims`` entries: "dp" (batch axes), "sp" (sequence — takes the dp axes
+    iff the "dp"-tagged dim could not be sharded, e.g. batch=1 long-context
+    decode), "tp" (model axis), or None. Tags apply only where the dimension
+    size is divisible by the axis size.
+    """
+    m = active_mesh()
+    if m is None or "model" not in m.axis_names:
+        return x
+    dp = dp_axes(m)
+    spec: list = [None] * len(dims)
+    dp_placed = False
+    for i, (size, tag) in enumerate(zip(x.shape, dims)):
+        if tag == "dp" and _divisible(size, m, dp):
+            spec[i] = dp
+            dp_placed = True
+        elif tag == "tp" and _divisible(size, m, "model"):
+            spec[i] = "model"
+    if not dp_placed:
+        for i, (size, tag) in enumerate(zip(x.shape, dims)):
+            if tag == "sp" and _divisible(size, m, dp):
+                spec[i] = dp
+                break
+    return jax.lax.with_sharding_constraint(x, NamedSharding(m, P(*spec)))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_axis(mesh: Mesh) -> str:
+    return "model"
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def _generic_spec(shape, mesh: Mesh, *, tp: str, fsdp: str, min_size: int = 1 << 14) -> P:
+    """Shard the largest tp-divisible dim on TP, the largest remaining
+    fsdp-divisible dim on FSDP; replicate small tensors."""
+    if int(np.prod(shape)) < min_size:
+        return P(*([None] * len(shape)))
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    assign: dict[int, object] = {}
+    for i in order:
+        if _divisible(shape[i], mesh, tp):
+            assign[i] = tp
+            break
+    for i in order:
+        if i in assign:
+            continue
+        if _divisible(shape[i], mesh, fsdp):
+            assign[i] = fsdp
+            break
+    return P(*[assign.get(i) for i in range(len(shape))])
+
+
+def param_specs(abstract_params, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree matching the param pytree (works on the abstract
+    tree from jax.eval_shape — no allocation)."""
+    tp = tp_axis(mesh)
+    fsdp = "data"
+
+    def rule(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = "/".join(keys)
+        shape = leaf.shape
+        nd = len(shape)
+        # scanned stacks carry a leading layer axis: never shard it
+        def with_lead(spec: P, lead: int) -> P:
+            return P(*([None] * lead + list(spec)))
+
+        lead = nd - 2 if nd >= 2 else 0
+        if "embed" in name or "unembed" in name:
+            v, d = shape[-2], shape[-1]
+            if _divisible(v, mesh, tp):
+                return P(tp, fsdp if _divisible(d, mesh, fsdp) else None)
+            return P(None, tp if _divisible(d, mesh, tp) else None)
+        if any(k in name for k in ("wi", "wg")) and "ffn" in name and cfg.is_moe and nd >= 3:
+            # MoE expert weights (..., E, D, F): EP on tp, FSDP on D
+            e, d, f = shape[-3], shape[-2], shape[-1]
+            spec = P(
+                tp if _divisible(e, mesh, tp) else None,
+                fsdp if _divisible(d, mesh, fsdp) else None,
+                None,
+            )
+            return with_lead(spec, nd - 3)
+        if "wo" in name and "ffn" in name and cfg.is_moe and nd >= 3:
+            e, f, d = shape[-3], shape[-2], shape[-1]
+            spec = P(
+                tp if _divisible(e, mesh, tp) else None,
+                fsdp if _divisible(f, mesh, fsdp) else None,
+                None,
+            )
+            return with_lead(spec, nd - 3)
+        if nd >= 2 and any(k in name for k in ("wq", "wk", "wv", "wi", "wg")):
+            d_in, d_out = shape[-2], shape[-1]
+            spec = P(
+                fsdp if _divisible(d_in, mesh, fsdp) else None,
+                tp if _divisible(d_out, mesh, tp) else None,
+            )
+            return with_lead(spec, lead)
+        if nd >= 2 and any(k in name for k in ("wo", "w_out", "out_proj")):
+            d_in, d_out = shape[-2], shape[-1]
+            spec = P(
+                tp if _divisible(d_in, mesh, tp) else None,
+                fsdp if _divisible(d_out, mesh, fsdp) else None,
+            )
+            return with_lead(spec, lead)
+        # generic fallback (ssm in_proj, rglru gates, conv filters, norms, ...)
+        lead_axes = max(nd - 2, 0)
+        inner = _generic_spec(shape[lead_axes:], mesh, tp=tp, fsdp=fsdp)
+        return P(*([None] * lead_axes + list(inner)))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_abstract):
+    """Shard every batch leaf's leading (batch) dim over the DP axes."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        if _divisible(shape[0], mesh, dp):
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_abstract)
+
+
+def decode_state_specs(cfg: ModelConfig, mesh: Mesh, state_abstract, batch: int):
+    """Cache shardings for serve: batch on DP where divisible, else the
+    sequence/window axis on DP (SP — the batch=1 long-context case); head_dim
+    on TP where legal.
+
+    The batch dim is located STRUCTURALLY (KV-like leaves are (..., B, S,
+    Hkv, hd) => batch at -4; state leaves are (..., B, feat...) => batch is
+    the first dim matching ``batch``). A value-matching heuristic here
+    previously mis-sharded the 6-D vlm cache and cost 1.1 TB/token of cache
+    resharding collectives (EXPERIMENTS §Perf, cell C).
+    """
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        spec: list = [None] * nd
+        kv_like = nd >= 4 and shape[-1] == cfg.head_dim and shape[-2] == cfg.num_kv_heads
+        if kv_like:
+            b_idx, s_idx = nd - 4, nd - 3
+        else:
+            b_idx = next((i for i, d in enumerate(shape) if d == batch), None)
+            s_idx = None
+        if b_idx is not None and _divisible(shape[b_idx], mesh, dp):
+            spec[b_idx] = dp
+        elif s_idx is not None and _divisible(shape[s_idx], mesh, dp):
+            spec[s_idx] = dp  # SP: shard the cache sequence axis instead
+        if nd >= 2 and spec[-1] is None and _divisible(shape[-1], mesh, tp) and shape[-1] >= 64:
+            spec[-1] = tp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, state_abstract)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the Sinkhorn hot loops (+ pure-jnp oracles).
+
+* ``fused_sinkhorn`` — online Gibbs-kernel mat-vec / LSE (never materialize K)
+* ``block_ell``      — block-sparse sketch mat-vec (scalar-prefetch gather)
+* ``ops``            — jit'd public wrappers with padding & CPU interpret mode
+* ``ref``            — oracles used by the kernel test sweeps
+"""
+from repro.kernels.ops import (
+    block_ell_matvec,
+    fused_sinkhorn_solve,
+    online_lse,
+    online_matvec,
+)
+
+__all__ = [
+    "block_ell_matvec",
+    "fused_sinkhorn_solve",
+    "online_lse",
+    "online_matvec",
+]

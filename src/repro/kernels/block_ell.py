@@ -1,0 +1,63 @@
+"""Block-ELL sparse kernel mat-vec Pallas kernel (TPU target).
+
+The Spar-Sink sketch lives in block-ELL layout (DESIGN §3): per row-block a
+fixed-width list of kept (Bk x Bk) kernel tiles plus their column-block ids.
+The mat-vec gathers v-blocks via *scalar prefetch* (the column-id array is
+prefetched to SMEM and drives the BlockSpec index_map — the TPU analogue of a
+gathered sparse GEMV), and every FLOP is a dense MXU tile op.
+
+``K~^T u`` reuses this same kernel on the transposed ELL layout produced by
+``sparsify.sparsify_block_ell_pair`` — layout duplication instead of scatter.
+
+Padded (invalid) slots carry zero tiles and column-id 0: they add exact zeros,
+so no masking is needed in the hot loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["block_ell_matvec_call"]
+
+
+def _kernel(idx_ref, vals_ref, v_ref, o_ref):
+    k = pl.program_id(1)
+    tile = vals_ref[0, 0]  # (Bk, Bk)
+    vblk = v_ref[...]  # (1, Bk)
+    acc = jnp.dot(tile, vblk[0], preferred_element_type=jnp.float32)  # (Bk,)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = acc[None, :]
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += acc[None, :]
+
+
+def block_ell_matvec_call(
+    vals: jax.Array,  # (nrb, maxb, Bk, Bk)
+    col_idx: jax.Array,  # (nrb, maxb) int32
+    v: jax.Array,  # (ncb, Bk)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns ``out`` of shape (nrb, Bk): out[i] = sum_k vals[i,k] @ v[col_idx[i,k]]."""
+    nrb, maxb, bk, _ = vals.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nrb, maxb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bk, bk), lambda i, k, idx: (i, k, 0, 0)),
+            pl.BlockSpec((1, bk), lambda i, k, idx: (idx[i, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda i, k, idx: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb, bk), jnp.float32),
+        interpret=interpret,
+    )(col_idx, vals, v)

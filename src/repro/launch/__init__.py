@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, dry-run, train/serve drivers."""
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

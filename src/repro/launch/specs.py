@@ -1,0 +1,135 @@
+"""Abstract input construction for the multi-pod dry-run: every model input
+as ShapeDtypeStruct (weak-type-correct, shardable, zero allocation), plus the
+matching NamedShardings for jit in_shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig, shape_of
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.train.step import TrainState, init_train_state, make_serve_step, make_train_step
+
+__all__ = ["abstract_train_args", "abstract_serve_args", "abstract_prefill_args", "step_for"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _extras_abstract(cfg: ModelConfig, batch: int):
+    ex = {}
+    if cfg.family == "vlm":
+        ex["images"] = _sds((batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        ex["frames"] = _sds((batch, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+    return ex
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_train_args(cfg: ModelConfig, shape_name: str, mesh, tcfg: TrainConfig | None = None):
+    """(args, in_shardings, donate) for train_step(state, batch, rng)."""
+    seq, gb, kind = shape_of(shape_name)
+    assert kind == "train"
+    tcfg = tcfg or TrainConfig(seq_len=seq, global_batch=gb)
+    key = jax.random.PRNGKey(0)
+    state_abs = jax.eval_shape(lambda k: init_train_state(k, cfg, tcfg), key)
+
+    pspecs = shd.param_specs(state_abs.params, cfg, mesh)
+    opt_specs = shd.param_specs(state_abs.opt.m, cfg, mesh)
+    ef_specs = None if state_abs.ef is None else shd.param_specs(state_abs.ef, cfg, mesh)
+    state_specs = TrainState(
+        params=pspecs,
+        opt=type(state_abs.opt)(step=P(), m=opt_specs, v=opt_specs),
+        ef=ef_specs,
+    )
+
+    batch_abs = {"tokens": _sds((gb, seq), jnp.int32), **_extras_abstract(cfg, gb)}
+    batch_specs = shd.batch_specs(cfg, mesh, batch_abs)
+    rng_abs = _sds((2,), jnp.uint32)
+
+    args = (state_abs, batch_abs, rng_abs)
+    in_sh = (_named(mesh, state_specs), _named(mesh, batch_specs), NamedSharding(mesh, P()))
+    return args, in_sh, (0,)  # donate the state
+
+
+def abstract_prefill_args(cfg: ModelConfig, shape_name: str, mesh):
+    """(args, in_shardings) for prefill = forward(params, tokens, extras)."""
+    seq, gb, kind = shape_of(shape_name)
+    key = jax.random.PRNGKey(0)
+    params_abs = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+    pspecs = shd.param_specs(params_abs, cfg, mesh)
+    tokens = _sds((gb, seq), jnp.int32)
+    extras = _extras_abstract(cfg, gb)
+    batch_specs = shd.batch_specs(cfg, mesh, {"tokens": tokens, **extras})
+    args = (params_abs, tokens, extras)
+    in_sh = (
+        _named(mesh, pspecs),
+        NamedSharding(mesh, batch_specs["tokens"]),
+        _named(mesh, {k: batch_specs[k] for k in extras}),
+    )
+    return args, in_sh
+
+
+def abstract_serve_args(cfg: ModelConfig, shape_name: str, mesh):
+    """(args, in_shardings, donate) for serve_step(params, state, tokens, pos, extras)."""
+    seq, gb, kind = shape_of(shape_name)
+    assert kind == "decode"
+    key = jax.random.PRNGKey(0)
+    params_abs = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+    pspecs = shd.param_specs(params_abs, cfg, mesh)
+    state_abs = jax.eval_shape(lambda: lm.init_decode_state(cfg, gb, seq))
+    sspecs = shd.decode_state_specs(cfg, mesh, state_abs, gb)
+
+    tokens = _sds((gb, 1), jnp.int32)
+    extras = _extras_abstract(cfg, gb)
+    if cfg.family == "audio":
+        extras = {"enc_out": _sds((gb, cfg.num_frames, cfg.d_model), jnp.bfloat16)}
+    if cfg.decode_cross_cache and cfg.family in ("vlm", "audio"):
+        extras = {}  # cross K/V live in the (precomputed) decode state
+    batch_specs = shd.batch_specs(cfg, mesh, {"tokens": tokens, **extras})
+    pos = _sds((), jnp.int32)
+
+    args = (params_abs, state_abs, tokens, pos, extras)
+    in_sh = (
+        _named(mesh, pspecs),
+        _named(mesh, sspecs),
+        NamedSharding(mesh, batch_specs["tokens"]),
+        NamedSharding(mesh, P()),
+        _named(mesh, {k: batch_specs[k] for k in extras}),
+    )
+    return args, in_sh, (1,)  # donate the cache state
+
+
+def step_for(cfg: ModelConfig, shape_name: str, tcfg: TrainConfig | None = None):
+    """The function the dry-run lowers for this shape kind."""
+    seq, gb, kind = shape_of(shape_name)
+    if kind == "train":
+        tcfg = tcfg or TrainConfig(seq_len=seq, global_batch=gb)
+        return make_train_step(cfg, tcfg), "train_step"
+    if kind == "prefill":
+
+        def prefill_step(params, tokens, extras):
+            # serving semantics: next-token logits for the last position only
+            # (returning full (B,S,V) f32 logits costs ~200 GB at 32k x 50k
+            # vocab and a matching all-reduce — measured in the dry-run).
+            logits, _ = lm.forward(params, tokens, cfg, extras or None, last_only=True)
+            return logits[:, -1, :]
+
+        return prefill_step, "prefill_step"
+    serve = make_serve_step(cfg)
+
+    def serve_step(params, state, tokens, pos, extras):
+        return serve(params, state, tokens, pos, extras or None)
+
+    return serve_step, "serve_step"

@@ -1,0 +1,21 @@
+"""Model zoo: one functional LM covering all 10 assigned architectures."""
+from repro.models.lm import (
+    decode_step,
+    fill_cross_cache,
+    forward,
+    init_decode_state,
+    init_params,
+    layer_windows,
+    loss_fn,
+    param_count,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_decode_state",
+    "init_params",
+    "layer_windows",
+    "loss_fn",
+    "param_count",
+]

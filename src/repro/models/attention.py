@@ -1,0 +1,243 @@
+"""Attention: GQA with RoPE / qk-norm, query-chunked O(S)-memory softmax,
+sliding-window masks (dynamic window => gemma3's 5:1 local:global pattern
+scans with a per-layer window scalar), cross-attention, and KV-cache decode
+with ring buffers for windowed layers.
+
+The query-chunked formulation (lax.scan over query tiles against the full
+K/V) keeps peak score memory at (B, H, chunk, S) instead of (B, H, S, S) —
+the prefill_32k shapes are un-lowerable without it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init, rope
+
+__all__ = ["init_attention", "attention", "cross_attention", "KVCache", "init_kv_cache", "attention_decode"]
+
+_NEG = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32, cross: bool = False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ko, cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = rms_norm_init(cfg.head_dim, dtype)
+        p["k_norm"] = rms_norm_init(cfg.head_dim, dtype)
+    return p
+
+
+def _split_heads(x, n_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, head_dim)
+
+
+def _gqa_attend(q, k, v, mask, scale, grouped_out: bool = False):
+    """Grouped-query attention without materializing repeated K/V.
+
+    q (B,C,H,hd), k/v (B,S,Hkv,hd), mask (B,C,S) -> (B,C,H,hd).
+    The repeat-then-reshape formulation breaks GSPMD propagation (measured:
+    full K/V replication collectives, ~86 GB/token at 32k decode — see
+    EXPERIMENTS §Perf); the grouped einsum keeps every operand sharded.
+    """
+    b, c, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, c, hkv, rep, d)
+    scores = jnp.einsum("bcgrd,bsgd->bgrcs", qg, k).astype(jnp.float32) * scale
+    # NOTE (refuted, EXPERIMENTS §Perf cell C'): constraining the score
+    # output to DP-only did NOT coax GSPMD into contraction-over-hd partial
+    # sums; one cache-sized f32 all-gather per layer remains (XLA SPMD
+    # limitation, cf. the "Involuntary full rematerialization" warning /
+    # Shardy b/433785288).
+    scores = jnp.where(mask[:, None, None, :, :], scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrcs,bsgd->bcgrd", w, v)
+    if grouped_out:
+        return out  # (b, c, g, r, d) — caller contracts wo in grouped form
+    return out.reshape(b, c, h, d)
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions, dtype, use_rope=True):
+    q = _split_heads(dense(params["wq"], x, dtype), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(dense(params["wk"], x, dtype), cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(params["wv"], x, dtype), cfg.num_kv_heads, cfg.head_dim)
+    if "q_norm" in params:
+        q = rms_norm(params["q_norm"], q)
+        k = rms_norm(params["k_norm"], k)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(
+    params,
+    x: jax.Array,  # (B, S, D)
+    positions: jax.Array,  # (S,)
+    cfg: ModelConfig,
+    window,  # python int / traced scalar; <=0 or >=S means full causal
+    causal: bool = True,  # False => bidirectional (whisper encoder)
+) -> jax.Array:
+    """Causal (optionally sliding-window) self-attention, query-chunked."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions[None, :], dtype)
+    scale = cfg.head_dim**-0.5
+    window = jnp.asarray(window, jnp.int32)
+
+    chunk = min(cfg.attn_chunk, s)
+    if s % chunk != 0:
+        chunk = s  # fallback: single chunk (smoke-size sequences)
+    n_chunks = s // chunk
+    qc = q.reshape(b, n_chunks, chunk, cfg.num_heads, cfg.head_dim)
+    pc = positions.reshape(n_chunks, chunk)
+    kpos = positions
+
+    def body(_, xs):
+        q_i, pos_i = xs  # (B, C, H, hd), (C,)
+        rel = pos_i[:, None] - kpos[None, :]
+        visible = rel >= 0 if causal else jnp.ones_like(rel, bool)
+        in_window = jnp.where(window > 0, jnp.abs(rel) < window, True)
+        mask = jnp.broadcast_to((visible & in_window)[None], (b, chunk, s))
+        return None, _gqa_attend(q_i, k, v, mask, scale)
+
+    _, out = jax.lax.scan(body, None, (qc.swapaxes(0, 1), pc))
+    out = out.swapaxes(0, 1).reshape(b, s, cfg.q_dim)
+    return dense(params["wo"], out, dtype)
+
+
+def cross_kv(params, memory: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Precompute cross-attention K/V from the (static) memory once —
+    decode steps then skip the (B, M, D) projections entirely."""
+    k = _split_heads(dense(params["wk"], memory.astype(dtype), dtype),
+                     cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(params["wv"], memory.astype(dtype), dtype),
+                     cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def cross_attention_cached(
+    params,
+    x: jax.Array,  # (B, S, D) queries
+    k: jax.Array,  # (B, M, Hkv, hd) precomputed
+    v: jax.Array,
+    cfg: ModelConfig,
+) -> jax.Array:
+    dtype = x.dtype
+    b, s, _ = x.shape
+    m = k.shape[1]
+    q = _split_heads(dense(params["wq"], x, dtype), cfg.num_heads, cfg.head_dim)
+    mask = jnp.ones((b, s, m), bool)
+    out = _gqa_attend(q, k.astype(dtype), v.astype(dtype), mask, cfg.head_dim**-0.5)
+    return dense(params["wo"], out.reshape(b, s, cfg.q_dim), dtype)
+
+
+def cross_attention(
+    params,
+    x: jax.Array,  # (B, S, D) queries
+    memory: jax.Array,  # (B, M, D) keys/values source (image / encoder output)
+    cfg: ModelConfig,
+) -> jax.Array:
+    dtype = x.dtype
+    b, s, _ = x.shape
+    m = memory.shape[1]
+    q = _split_heads(dense(params["wq"], x, dtype), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(dense(params["wk"], memory, dtype), cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(params["wv"], memory, dtype), cfg.num_kv_heads, cfg.head_dim)
+    mask = jnp.ones((b, s, m), bool)
+    out = _gqa_attend(q, k, v, mask, cfg.head_dim**-0.5)
+    return dense(params["wo"], out.reshape(b, s, cfg.q_dim), dtype)
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_cache, Hkv, hd)
+    v: jax.Array  # (B, S_cache, Hkv, hd)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq: int, window, dtype=jnp.bfloat16):
+    s_cache = min(seq, window) if (window and window > 0) else seq
+    shape = (batch, s_cache, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(
+    params,
+    x: jax.Array,  # (B, 1, D) the new token's activations
+    cache: KVCache,
+    pos: jax.Array,  # () int32 absolute position of the new token
+    cfg: ModelConfig,
+    window=0,  # mask width (0 = full causal); may be traced (scanned layers)
+    ring: bool = False,  # True => cache is a ring buffer of size < pos range
+) -> tuple[jax.Array, KVCache]:
+    """One-token causal attention against a KV cache.
+
+    Two cache disciplines:
+    * ``ring=False``: cache length covers positions [0, s_cache); the new
+      token is written at slot ``pos`` and masked by ``window`` if set.
+    * ``ring=True``: cache is a circular buffer (sliding-window layers at
+      long context); slot ``pos % s_cache``, everything resident is visible.
+    """
+    dtype = x.dtype
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        params, x, cfg, jnp.full((1, 1), pos, jnp.int32), dtype
+    )
+    s_cache = cache.k.shape[1]
+    slot = (pos % s_cache) if ring else jnp.minimum(pos, s_cache - 1)
+    slot = slot.astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (zero, slot, zero, zero)
+    )
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (zero, slot, zero, zero)
+    )
+    new_cache = KVCache(k, v)
+
+    # Pin K/V to the cache layout (batch->dp, head_dim->tp). Without this,
+    # GSPMD re-shards the WHOLE cache to put Hkv on the model axis for the
+    # score dot — an involuntary full rematerialization measured at
+    # ~1 GB/layer/step (EXPERIMENTS §Perf). With the pin, the dot contracts
+    # over the tp-sharded head_dim and all-reduces only the (tiny) scores.
+    if ring:
+        # windowed ring caches are small by construction — pinning them only
+        # triggers pointless reshards (measured on rgemma decode cells)
+        kf, vf = k.astype(dtype), v.astype(dtype)
+    else:
+        kf = constrain(k.astype(dtype), ("dp", "sp", None, "tp"))
+        vf = constrain(v.astype(dtype), ("dp", "sp", None, "tp"))
+    idx = jnp.arange(s_cache)
+    if ring:
+        age = (slot - idx) % s_cache  # 0 = newest entry
+        valid = age <= jnp.minimum(pos, s_cache - 1)
+    else:
+        window = jnp.asarray(window, jnp.int32)
+        valid = (idx <= pos) & jnp.where(window > 0, pos - idx < window, True)
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, s_cache))
+    out = _gqa_attend(q, kf, vf, mask, cfg.head_dim**-0.5, grouped_out=True)
+    # Grouped output projection: contracting (g, r, hd) directly keeps V and
+    # the attention output head_dim-sharded end to end. Flattening to q_dim
+    # first creates a strided sharding GSPMD cannot express, and it fell back
+    # to all-gathering the f32 V cache (~1 GB/layer/step; EXPERIMENTS §Perf).
+    rep = cfg.num_heads // cfg.num_kv_heads
+    wo3 = params["wo"]["w"].astype(dtype).reshape(
+        cfg.num_kv_heads, rep, cfg.head_dim, cfg.d_model
+    )
+    y = jnp.einsum("bcgrd,grdm->bcm", out, wo3)
+    return y, new_cache

@@ -1,0 +1,88 @@
+"""Shared transformer building blocks (pure-JAX, param pytrees, no flax).
+
+Conventions:
+* params are nested dicts of arrays; init functions mirror apply functions;
+* weights are stored in ``cfg.param_dtype`` (f32 master) and cast to
+  ``cfg.dtype`` (bf16) at use — the standard mixed-precision recipe;
+* all linears are bias-free (modern-LM convention; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rms_norm_init",
+    "rms_norm",
+    "rope",
+    "swiglu_init",
+    "swiglu",
+    "embed_init",
+    "softcap",
+]
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = (d_in**-0.5) if scale is None else scale
+    return {"w": _normal(key, (d_in, d_out), scale, dtype)}
+
+
+def dense(params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return x @ params["w"].astype(dtype)
+
+
+def rms_norm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, d_ff, dtype),
+        "wg": dense_init(k2, d, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(params, x: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    h = dense(params["wi"], x, dtype) * jax.nn.silu(dense(params["wg"], x, dtype))
+    return dense(params["wo"], h, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"w": _normal(key, (vocab, d), 0.02, dtype)}
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,627 @@
+"""Model assembly for all 10 assigned architectures.
+
+One functional LM with per-family block layouts:
+
+* dense / moe   : scanned uniform decoder blocks (attn + swiglu/moe); gemma3's
+                  5:1 local:global pattern rides the scan via a per-layer
+                  window array (0 = global).
+* ssm           : scanned mamba2 blocks (norm -> SSD -> residual).
+* hybrid        : unrolled (rglru, rglru, window-attn) pattern + swiglu.
+* vlm           : grouped scan — (period-1) self layers + 1 cross-attn layer
+                  per group; image patch embeddings come in as a stub input.
+* audio         : whisper enc-dec — scanned bidirectional encoder over stub
+                  frame embeddings, scanned decoder with cross-attention.
+
+Public entry points: ``init_params``, ``forward``, ``loss_fn``,
+``init_decode_state``, ``decode_step``, ``param_count``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.attention import KVCache
+from repro.models.layers import (
+    embed_init,
+    rms_norm,
+    rms_norm_init,
+    softcap,
+    swiglu,
+    swiglu_init,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_decode_state",
+    "decode_step",
+    "param_count",
+    "layer_windows",
+]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_ffn(key, cfg: ModelConfig, dtype):
+    if cfg.is_moe:
+        return moe_lib.init_moe(key, cfg, dtype)
+    return swiglu_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _init_attn_block(key, cfg: ModelConfig, dtype, cross=False, with_ffn=True):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rms_norm_init(cfg.d_model, dtype),
+        "attn": attn_lib.init_attention(k1, cfg, dtype, cross=cross),
+    }
+    if with_ffn:
+        p["ln2"] = rms_norm_init(cfg.d_model, dtype)
+        p["ffn"] = _init_ffn(k2, cfg, dtype)
+    return p
+
+
+def _init_ssm_block(key, cfg: ModelConfig, dtype):
+    return {"ln1": rms_norm_init(cfg.d_model, dtype), "ssm": ssm_lib.init_ssm(key, cfg, dtype)}
+
+
+def _init_rglru_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rms_norm_init(cfg.d_model, dtype),
+        "mix": rglru_lib.init_rglru(k1, cfg, dtype),
+        "ln2": rms_norm_init(cfg.d_model, dtype),
+        "ffn": swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _stack_init(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer attention window (0 = full/global) — gemma3's 5:1 pattern."""
+    if cfg.global_period > 0:
+        w = [
+            0 if (i % cfg.global_period == cfg.global_period - 1) else cfg.sliding_window
+            for i in range(cfg.num_layers)
+        ]
+    else:
+        w = [cfg.sliding_window] * cfg.num_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kb, ku, kenc = jax.random.split(key, 4)
+    params = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ku, cfg.vocab_size, cfg.d_model, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        params["blocks"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, dtype), kb, cfg.num_layers
+        )
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg, dtype), kb, cfg.num_layers
+        )
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        blocks = []
+        for i in range(cfg.num_layers):
+            kind = pat[i % len(pat)]
+            ki = jax.random.fold_in(kb, i)
+            blocks.append(
+                _init_rglru_block(ki, cfg, dtype)
+                if kind == "rglru"
+                else _init_attn_block(ki, cfg, dtype)
+            )
+        params["blocks"] = blocks
+    elif fam == "vlm":
+        period = cfg.cross_attn_period
+        n_groups = cfg.num_layers // period
+        k_self, k_cross = jax.random.split(kb)
+        params["blocks"] = _stack_init(
+            lambda k: _stack_init(
+                lambda k2: _init_attn_block(k2, cfg, dtype), k, period - 1
+            ),
+            k_self,
+            n_groups,
+        )
+        params["cross_blocks"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, dtype, cross=True), k_cross, n_groups
+        )
+    elif fam == "audio":
+        params["encoder"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, dtype), kenc, cfg.encoder_layers
+        )
+        params["enc_norm"] = rms_norm_init(cfg.d_model, dtype)
+
+        def dec_block(k):
+            k1, k2 = jax.random.split(k)
+            p = _init_attn_block(k1, cfg, dtype)
+            p["ln_x"] = rms_norm_init(cfg.d_model, dtype)
+            p["cross"] = attn_lib.init_attention(k2, cfg, dtype, cross=True)
+            return p
+
+        params["blocks"] = _stack_init(dec_block, kb, cfg.num_layers)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _layer(stacked, i: int):
+    """Slice layer i's params out of a stacked (L, ...) pytree."""
+    return jax.tree.map(lambda p: p[i], stacked)
+
+
+def _maybe_ckpt(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)
+
+
+def _attn_ffn_block(p, x, positions, cfg, window, rng, causal=True, memory=None):
+    """Standard block: [optional cross] -> self-attn -> ffn. Returns (x, aux)."""
+    h = attn_lib.attention(p["attn"], rms_norm(p["ln1"], x), positions, cfg, window, causal)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        y = rms_norm(p["ln2"], x)
+        if cfg.is_moe:
+            out, aux = moe_lib.moe_ffn(p["ffn"], y, cfg, rng)
+        else:
+            out = swiglu(p["ffn"], y, x.dtype)
+        x = x + out
+    return x, aux
+
+
+def _cross_block(p, x, memory, cfg):
+    h = attn_lib.cross_attention(p["attn"], rms_norm(p["ln1"], x), memory, cfg)
+    x = x + h
+    x = x + swiglu(p["ffn"], rms_norm(p["ln2"], x), x.dtype)
+    return x
+
+
+def _sinusoidal(positions: jax.Array, d: int, dtype) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _encode_audio(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, F, D)."""
+    dtype = frames.dtype
+    f = frames.shape[1]
+    x = frames + _sinusoidal(jnp.arange(f), cfg.d_model, dtype)[None]
+    positions = jnp.arange(f)
+
+    def body(x, p):
+        x, _ = _attn_ffn_block(p, x, positions, cfg, 0, None, causal=False)
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(_maybe_ckpt(body, cfg), x, params["encoder"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = _maybe_ckpt(body, cfg)(x, _layer(params["encoder"], i))
+    return rms_norm(params["enc_norm"], x)
+
+
+def forward(
+    params, tokens: jax.Array, cfg: ModelConfig, extras=None, rng=None,
+    last_only: bool = False,
+):
+    """tokens (B, S) -> (logits (B, S, V), aux). ``extras`` carries the stub
+    modality inputs: {"images": (B, M, D)} / {"frames": (B, F, D)}.
+    ``last_only`` computes logits for the final position only (prefill
+    serving semantics — skips the (B,S,V) unembed matmul and buffer)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = params["embed"]["w"][tokens].astype(dtype)
+    # Re-assert batch sharding after the embedding gather: the gather's index
+    # (batch on 'data') and operand (FSDP 'data' on the embed d-dim) shardings
+    # conflict, and GSPMD resolves it by UNSHARDING THE BATCH — every
+    # downstream activation then runs 16x replicated (measured: full-global-
+    # batch f32 tensors in the per-device HLO; EXPERIMENTS §Perf G5).
+    x = constrain(x, ("dp", None, None))
+    positions = jnp.arange(s)
+    aux = jnp.zeros((), jnp.float32)
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        windows = layer_windows(cfg)
+        rngs = jax.random.split(rng, cfg.num_layers)
+
+        def body(carry, xs):
+            x, aux = carry
+            p, w, r = xs
+            x, a = _attn_ffn_block(p, x, positions, cfg, w, r)
+            return (x, aux + a), None
+
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(
+                _maybe_ckpt(body, cfg), (x, aux), (params["blocks"], windows, rngs)
+            )
+        else:
+            for i in range(cfg.num_layers):
+                (x, aux), _ = _maybe_ckpt(body, cfg)(
+                    (x, aux), (_layer(params["blocks"], i), windows[i], rngs[i])
+                )
+    elif fam == "ssm":
+
+        def body(x, p):
+            x = x + ssm_lib.ssm_forward(p["ssm"], rms_norm(p["ln1"], x), cfg)
+            return x, None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(_maybe_ckpt(body, cfg), x, params["blocks"])
+        else:
+            for i in range(cfg.num_layers):
+                x, _ = _maybe_ckpt(body, cfg)(x, _layer(params["blocks"], i))
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        for i, p in enumerate(params["blocks"]):
+            if pat[i % len(pat)] == "rglru":
+                x = x + rglru_lib.rglru_forward(p["mix"], rms_norm(p["ln1"], x), cfg)
+                x = x + swiglu(p["ffn"], rms_norm(p["ln2"], x), dtype)
+            else:
+                x, _ = _attn_ffn_block(p, x, positions, cfg, cfg.sliding_window, None)
+    elif fam == "vlm":
+        memory = extras["images"].astype(dtype)
+
+        def group(carry, xs):
+            x = carry
+            p_self, p_cross = xs
+
+            def inner(x, p):
+                x, _ = _attn_ffn_block(p, x, positions, cfg, 0, None)
+                return x, None
+
+            if cfg.scan_layers:
+                x, _ = jax.lax.scan(inner, x, p_self)
+            else:
+                for j in range(cfg.cross_attn_period - 1):
+                    x, _ = inner(x, _layer(p_self, j))
+            x = _cross_block(p_cross, x, memory, cfg)
+            return x, None
+
+        n_groups = cfg.num_layers // cfg.cross_attn_period
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(
+                _maybe_ckpt(group, cfg), x, (params["blocks"], params["cross_blocks"])
+            )
+        else:
+            for g in range(n_groups):
+                x, _ = _maybe_ckpt(group, cfg)(
+                    x, (_layer(params["blocks"], g), _layer(params["cross_blocks"], g))
+                )
+    elif fam == "audio":
+        enc = _encode_audio(params, extras["frames"].astype(dtype), cfg)
+        x = x + _sinusoidal(positions, cfg.d_model, dtype)[None]
+
+        def body(x, p):
+            x, _ = _attn_ffn_block(p, x, positions, cfg, 0, None)
+            x = x + attn_lib.cross_attention(
+                p["cross"], rms_norm(p["ln_x"], x), enc, cfg
+            )
+            return x, None
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(_maybe_ckpt(body, cfg), x, params["blocks"])
+        else:
+            for i in range(cfg.num_layers):
+                x, _ = _maybe_ckpt(body, cfg)(x, _layer(params["blocks"], i))
+    else:
+        raise ValueError(fam)
+
+    if last_only:
+        x = x[:, -1:, :]
+    x = rms_norm(params["final_norm"], x)
+    unembed = (
+        params["embed"]["w"] if cfg.tie_embeddings else params["unembed"]["w"]
+    ).astype(dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x, unembed)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rng=None, z_loss: float = 1e-4):
+    """Next-token CE (+ z-loss + MoE aux). batch = {"tokens", optional extras}.
+
+    Sharded-vocab cross entropy: the target logit is extracted with an
+    iota==target mask + sum over the (model-sharded) vocab axis, so every
+    reduction is local-partial + a (B,S)-sized all-reduce. The obvious
+    ``take_along_axis(logits, targets)`` gather made GSPMD replicate the
+    full f32 logits across the mesh — 3 x 67 GB per step on the 256k-vocab
+    archs (EXPERIMENTS §Perf, global fix G2).
+    """
+    tokens = batch["tokens"]
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    logits, aux = forward(params, tokens, cfg, extras or None, rng)
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    # logsumexp via local max/sum: GSPMD lowers the vocab reductions to
+    # partial reductions + tiny (B,S) all-reduces.
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    tgt_logit = jnp.sum(
+        jnp.where(vocab_iota == targets[..., None], logits, 0.0), axis=-1
+    )
+    ce = jnp.mean(lse - tgt_logit)
+    zl = z_loss * jnp.mean(lse**2)
+    total = ce + zl + cfg.aux_loss_weight * aux
+    return total, {"ce": ce, "z_loss": zl, "moe_aux": aux}
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def _scan_or_unroll(cfg: ModelConfig, body, x, xs):
+    """lax.scan when cfg.scan_layers else a Python unroll with re-stacked
+    outputs (identical semantics; the unrolled form exists so cost_analysis —
+    which counts a while body ONCE — can be extrapolated; see dryrun)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        x, o = body(x, _layer(xs, i))
+        outs.append(o)
+    stacked = jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+    return x, stacked
+
+
+def _stack_cache(cfg, n, batch, seq, dtype=jnp.bfloat16):
+    shape = (n, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Concrete zero state (use jax.eval_shape(...) for the dry-run)."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {"kv": _stack_cache(cfg, cfg.num_layers, batch, seq, dtype)}
+    if fam == "ssm":
+        st = ssm_lib.init_ssm_state(cfg, batch, jnp.float32)
+        return {
+            "ssm": jax.tree.map(
+                lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), st
+            )
+        }
+    if fam == "hybrid":
+        states = []
+        pat = cfg.block_pattern
+        for i in range(cfg.num_layers):
+            if pat[i % len(pat)] == "rglru":
+                states.append(rglru_lib.init_rglru_state(cfg, batch, jnp.float32))
+            else:
+                s_cache = min(seq, cfg.sliding_window)
+                states.append(
+                    KVCache(
+                        jnp.zeros((batch, s_cache, cfg.num_kv_heads, cfg.head_dim), dtype),
+                        jnp.zeros((batch, s_cache, cfg.num_kv_heads, cfg.head_dim), dtype),
+                    )
+                )
+        return {"layers": states}
+    if fam == "vlm":
+        period = cfg.cross_attn_period
+        n_groups = cfg.num_layers // period
+        shape = (n_groups, period - 1, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+        state = {"kv": KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))}
+        if cfg.decode_cross_cache:
+            xshape = (n_groups, batch, cfg.num_image_tokens, cfg.num_kv_heads, cfg.head_dim)
+            state["cross"] = KVCache(jnp.zeros(xshape, dtype), jnp.zeros(xshape, dtype))
+        return state
+    if fam == "audio":
+        state = {"kv": _stack_cache(cfg, cfg.num_layers, batch, seq, dtype)}
+        if cfg.decode_cross_cache:
+            xshape = (cfg.num_layers, batch, cfg.num_frames, cfg.num_kv_heads, cfg.head_dim)
+            state["cross"] = KVCache(jnp.zeros(xshape, dtype), jnp.zeros(xshape, dtype))
+        return state
+    raise ValueError(fam)
+
+
+def fill_cross_cache(params, cfg: ModelConfig, state, extras, dtype=jnp.bfloat16):
+    """Populate state['cross'] from the modality memory (once per request)."""
+    if "cross" not in state:
+        return state
+    if cfg.family == "vlm":
+        memory = extras["images"]
+        ks, vs = [], []
+        n_groups = cfg.num_layers // cfg.cross_attn_period
+        for g in range(n_groups):
+            p = _layer(params["cross_blocks"], g)
+            k, v = attn_lib.cross_kv(p["attn"], memory, cfg, dtype)
+            ks.append(k)
+            vs.append(v)
+    else:  # audio
+        memory = extras["enc_out"]
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            p = _layer(params["blocks"], i)
+            k, v = attn_lib.cross_kv(p["cross"], memory, cfg, dtype)
+            ks.append(k)
+            vs.append(v)
+    state = dict(state)
+    state["cross"] = KVCache(jnp.stack(ks), jnp.stack(vs))
+    return state
+
+
+def decode_step(params, state, tokens: jax.Array, pos, cfg: ModelConfig, extras=None):
+    """One new token: (B, 1) + caches(pos entries filled) -> (logits, state').
+
+    ``pos`` is the absolute position of the new token (scalar int32).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"]["w"][tokens].astype(dtype)
+    x = constrain(x, ("dp", None, None))  # see forward(): G5
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        windows = layer_windows(cfg)
+
+        def body(x, xs):
+            p, cache, w = xs
+            h, new_cache = attn_lib.attention_decode(
+                p["attn"], rms_norm(p["ln1"], x), cache, pos, cfg, window=w
+            )
+            x = x + h
+            y = rms_norm(p["ln2"], x)
+            if cfg.is_moe:
+                out, _ = moe_lib.moe_ffn(p["ffn"], y, cfg, None)
+            else:
+                out = swiglu(p["ffn"], y, dtype)
+            return x + out, new_cache
+
+        x, kv = _scan_or_unroll(cfg, body, x, (params["blocks"], state["kv"], windows))
+        state = {"kv": kv}
+    elif fam == "ssm":
+
+        def body(x, xs):
+            p, st = xs
+            h, st = ssm_lib.ssm_decode(p["ssm"], rms_norm(p["ln1"], x), st, cfg)
+            return x + h, st
+
+        x, st = _scan_or_unroll(cfg, body, x, (params["blocks"], state["ssm"]))
+        state = {"ssm": st}
+    elif fam == "hybrid":
+        pat = cfg.block_pattern
+        new_states = []
+        for i, p in enumerate(params["blocks"]):
+            st = state["layers"][i]
+            if pat[i % len(pat)] == "rglru":
+                h, st = rglru_lib.rglru_decode(p["mix"], rms_norm(p["ln1"], x), st, cfg)
+                x = x + h
+                x = x + swiglu(p["ffn"], rms_norm(p["ln2"], x), dtype)
+            else:
+                # hybrid attn caches are sized min(seq, window): always ring
+                h, st = attn_lib.attention_decode(
+                    p["attn"], rms_norm(p["ln1"], x), st, pos, cfg,
+                    window=cfg.sliding_window, ring=True,
+                )
+                x = x + h
+                x = x + swiglu(p["ffn"], rms_norm(p["ln2"], x), dtype)
+            new_states.append(st)
+        state = {"layers": new_states}
+    elif fam == "vlm":
+        cached = "cross" in state
+
+        def group(x, xs):
+            if cached:
+                p_self, p_cross, cache, ck, cv = xs
+            else:
+                p_self, p_cross, cache = xs
+
+            def inner(x, xs2):
+                p, c = xs2
+                h, c = attn_lib.attention_decode(
+                    p["attn"], rms_norm(p["ln1"], x), c, pos, cfg
+                )
+                x = x + h
+                x = x + swiglu(p["ffn"], rms_norm(p["ln2"], x), dtype)
+                return x, c
+
+            if cfg.scan_layers:
+                x, cache = jax.lax.scan(inner, x, (p_self, cache))
+            else:
+                outs = []
+                for j in range(cfg.cross_attn_period - 1):
+                    x, c = inner(x, (_layer(p_self, j), _layer(cache, j)))
+                    outs.append(c)
+                cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            y = rms_norm(p_cross["ln1"], x)
+            if cached:
+                h = attn_lib.cross_attention_cached(p_cross["attn"], y, ck, cv, cfg)
+            else:
+                h = attn_lib.cross_attention(
+                    p_cross["attn"], y, extras["images"].astype(dtype), cfg
+                )
+            x = x + h
+            x = x + swiglu(p_cross["ffn"], rms_norm(p_cross["ln2"], x), dtype)
+            return x, cache
+
+        xs = (params["blocks"], params["cross_blocks"], state["kv"])
+        if cached:
+            xs = xs + (state["cross"].k, state["cross"].v)
+        x, kv = _scan_or_unroll(cfg, group, x, xs)
+        new_state = {"kv": kv}
+        if cached:
+            new_state["cross"] = state["cross"]
+        state = new_state
+    elif fam == "audio":
+        cached = "cross" in state
+        x = x + _sinusoidal(jnp.full((1,), pos, jnp.int32), cfg.d_model, dtype)[None]
+
+        def body(x, xs):
+            if cached:
+                p, cache, ck, cv = xs
+            else:
+                p, cache = xs
+            h, cache = attn_lib.attention_decode(
+                p["attn"], rms_norm(p["ln1"], x), cache, pos, cfg
+            )
+            x = x + h
+            y = rms_norm(p["ln_x"], x)
+            if cached:
+                x = x + attn_lib.cross_attention_cached(p["cross"], y, ck, cv, cfg)
+            else:
+                x = x + attn_lib.cross_attention(
+                    p["cross"], y, extras["enc_out"].astype(dtype), cfg
+                )
+            x = x + swiglu(p["ffn"], rms_norm(p["ln2"], x), dtype)
+            return x, cache
+
+        xs = (params["blocks"], state["kv"])
+        if cached:
+            xs = xs + (state["cross"].k, state["cross"].v)
+        x, kv = _scan_or_unroll(cfg, body, x, xs)
+        new_state = {"kv": kv}
+        if cached:
+            new_state["cross"] = state["cross"]
+        state = new_state
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x)
+    unembed = (
+        params["embed"]["w"] if cfg.tie_embeddings else params["unembed"]["w"]
+    ).astype(dtype)
+    logits = jnp.einsum("bsd,vd->bsv", x, unembed)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, state

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts FFN with three routers:
+
+* ``softmax``    — standard top-k token-choice routing;
+* ``sinkhorn``   — balanced assignment as *entropic OT* between tokens and
+                   experts (a fixed, differentiable number of log-domain
+                   Sinkhorn iterations on the token-expert affinity kernel);
+* ``spar_sink``  — the paper's technique as a first-class LM feature: the
+                   affinity kernel is importance-sparsified with the UOT
+                   probabilities of eq. (11) (kernel-magnitude aware) before
+                   the Sinkhorn iterations, cutting router cost from
+                   O(N·E) to O(s) per iteration. Sampling is stop-gradient
+                   (like dropout); kept entries are rescaled by 1/p* so the
+                   sketched kernel stays unbiased (eq. 7).
+
+Dispatch is the capacity-bounded gather/scatter formulation: per sequence
+(the routing group) each expert keeps its top-C tokens; gathers/scatters and
+batched expert GEMMs lower to clean sharded HLO (experts on the ``model``
+mesh axis, tokens on ``data``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+__all__ = ["init_moe", "moe_ffn", "sinkhorn_router_probs"]
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    scale = d**-0.5
+    return {
+        "router": dense_init(kr, d, e, dtype, scale=0.02),
+        "wi": (jax.random.normal(ki, (e, d, f), jnp.float32) * scale).astype(dtype),
+        "wg": (jax.random.normal(kg, (e, d, f), jnp.float32) * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, (e, f, d), jnp.float32) * (f**-0.5)).astype(dtype),
+    }
+
+
+def _fixed_sinkhorn(logK: jax.Array, loga: jax.Array, logb: jax.Array, iters: int):
+    """Fixed-iteration log-domain Sinkhorn on (B, N, E) kernels (differentiable)."""
+
+    def lse(z, axis):
+        return jax.scipy.special.logsumexp(z, axis=axis)
+
+    def body(_, fg):
+        f, g = fg
+        f = loga - lse(logK + g[:, None, :], axis=2)  # (B, N)
+        g = logb - lse(logK + f[:, :, None], axis=1)  # (B, E)
+        return f, g
+
+    f0 = jnp.zeros(logK.shape[:2], logK.dtype)
+    g0 = jnp.zeros((logK.shape[0], logK.shape[2]), logK.dtype)
+    f, g = jax.lax.fori_loop(0, iters, body, (f0, g0))
+    return logK + f[:, :, None] + g[:, None, :]  # log plan
+
+
+def sinkhorn_router_probs(
+    scores: jax.Array,  # (B, N, E) raw affinities
+    cfg: ModelConfig,
+    rng: jax.Array | None,
+) -> jax.Array:
+    """Balanced routing probabilities via (Spar-)Sinkhorn.
+
+    Marginals: each token emits k/N mass, each expert absorbs k/E — the
+    balanced-assignment OT problem (cf. BASE layers / S-BASE), solved with
+    ``cfg.router_iters`` entropic iterations at temperature ``router_eps``.
+    """
+    b, n, e = scores.shape
+    k = cfg.experts_per_token
+    eps = cfg.router_eps
+    logK = (scores.astype(jnp.float32) - jax.lax.stop_gradient(scores.astype(jnp.float32)).max(axis=-1, keepdims=True)) / eps
+
+    if cfg.router == "spar_sink":
+        # eq.(11)-style probabilities with uniform marginals: the (a_i b_j)
+        # factor is constant, so importance mass comes from the kernel term.
+        lam = 1.0
+        c_k = eps / (2.0 * lam + eps)
+        logp = c_k * logK
+        logp = logp - jax.scipy.special.logsumexp(logp, axis=(1, 2), keepdims=True)
+        s_budget = cfg.router_sample_frac * n * e
+        p_star = jnp.minimum(1.0, s_budget * jnp.exp(logp))
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        keep = jax.random.uniform(rng, logp.shape) < jax.lax.stop_gradient(p_star)
+        # unbiased sketch in log space: logK~ = logK - log p* on kept entries
+        logK = jnp.where(
+            keep, logK - jnp.log(jnp.maximum(jax.lax.stop_gradient(p_star), 1e-30)), -1e30
+        )
+
+    loga = jnp.full((b, n), jnp.log(k / n), jnp.float32)
+    logb = jnp.full((b, e), jnp.log(k / e), jnp.float32)
+    log_plan = _fixed_sinkhorn(logK, loga, logb, cfg.router_iters)
+    # rescale rows to probabilities over experts for top-k selection
+    return jax.nn.softmax(log_plan, axis=-1)
+
+
+def moe_ffn(
+    params,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    rng: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar)."""
+    dtype = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = max(1, int(cfg.capacity_factor * k * s / e))
+
+    scores = jnp.einsum("bsd,de->bse", x, params["router"]["w"].astype(dtype)).astype(
+        jnp.float32
+    )
+    if cfg.router in ("sinkhorn", "spar_sink"):
+        probs = sinkhorn_router_probs(scores, cfg, rng)
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+
+    # token-choice top-k ...
+    topk_w, topk_idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    topk_w = topk_w / jnp.maximum(topk_w.sum(-1, keepdims=True), 1e-9)
+    # ... then per-expert capacity: expert e keeps its top-`cap` tokens.
+    chosen = jax.nn.one_hot(topk_idx, e, dtype=jnp.float32)  # (B, S, k, E)
+    gate_e = jnp.einsum("bske,bsk->bse", chosen, topk_w)  # (B, S, E)
+    keep_w, keep_idx = jax.lax.top_k(gate_e.swapaxes(1, 2), cap)  # (B, E, cap)
+
+    xe = jnp.take_along_axis(
+        x[:, None, :, :], keep_idx[:, :, :, None], axis=2
+    )  # (B, E, cap, D)
+    # NOTE (EXPERIMENTS §Perf cell A, refuted hypothesis A2): forcing the
+    # textbook EP layout here — constrain(xe, ("dp","tp",None,None)) so GSPMD
+    # lowers one all-to-all on the dispatched tokens — measured WORSE
+    # (collective 16.4s -> 23.2s): with 64 small experts the weights are
+    # ~270 MB/layer while dispatched tokens are ~2.7 GB/layer, so XLA's
+    # weight-all-gather choice is the cheaper collective. Left unconstrained.
+    h = jnp.einsum("becd,edf->becf", xe, params["wi"].astype(dtype))
+    g = jnp.einsum("becd,edf->becf", xe, params["wg"].astype(dtype))
+    y = jnp.einsum("becf,efd->becd", h * jax.nn.silu(g), params["wo"].astype(dtype))
+    y = y * keep_w[..., None].astype(dtype)
+
+    # scatter-add expert outputs back to their token slots (keep_idx < s)
+    out = (
+        jnp.zeros((b, s, d), dtype)
+        .at[jnp.arange(b)[:, None, None], keep_idx, :]
+        .add(y)
+    )
+
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(chosen, axis=2), axis=1)  # (B, E) fraction routed
+    p_e = jnp.mean(probs, axis=1)  # (B, E) mean prob
+    aux = e * jnp.mean(jnp.sum(f_e * p_e, axis=-1)) / k
+    return out, aux.astype(jnp.float32)

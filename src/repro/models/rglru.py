@@ -1,0 +1,133 @@
+"""RecurrentGemma recurrent block: gated linear branch x conv1d + RG-LRU.
+
+RG-LRU recurrence (Griffin, arXiv:2402.19427):
+  r_t = sigmoid(W_r u_t),  i_t = sigmoid(W_i u_t)
+  a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The linear recurrence is run as an associative scan over the sequence
+(log-depth; SP-shardable), and as a single fused step for decode (O(1)
+state — this is why recurrentgemma runs the long_500k shape).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+__all__ = ["init_rglru", "rglru_forward", "RGLRUState", "init_rglru_state", "rglru_decode"]
+
+_C = 8.0
+_CONV_K = 4
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32):
+    w = cfg.rnn_width or cfg.d_model
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(k1, cfg.d_model, w, dtype),
+        "w_gate": dense_init(k2, cfg.d_model, w, dtype),
+        "conv_w": (jax.random.normal(k3, (_CONV_K, w)) * 0.1).astype(dtype),
+        "w_r": dense_init(k4, w, w, dtype),
+        "w_i": dense_init(k5, w, w, dtype),
+        "lam": jnp.full((w,), 2.0, dtype),  # softplus(2) ~ 2.1 => slow decay
+        "w_out": dense_init(k6, w, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x, w):
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    return sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+
+
+def _gates(params, u, dtype):
+    r = jax.nn.sigmoid(u @ params["w_r"]["w"].astype(dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ params["w_i"]["w"].astype(dtype)).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i
+
+
+def _combine(e1, e2):
+    a1, h1 = e1
+    a2, h2 = e2
+    return a1 * a2, h1 * a2 + h2
+
+
+def _scan_assoc(a, b):
+    """Baseline: one associative scan over the full sequence — XLA
+    materializes ~2 log2(S) passes over (B,S,W)."""
+    return jax.lax.associative_scan(_combine, (a, b), axis=1)[1]
+
+
+def _scan_chunked(a, b, q: int):
+    """Chunked scan: intra-chunk associative scans (log2(q) passes) + a tiny
+    cross-chunk scan over (B, nc, W) states — cuts HBM traffic ~log2(S/q)
+    passes vs the full associative scan (EXPERIMENTS §Perf, cell B)."""
+    bsz, s, w = a.shape
+    if s % q != 0 or s <= q:
+        return _scan_assoc(a, b)
+    nc = s // q
+    ac = a.reshape(bsz, nc, q, w)
+    bc = b.reshape(bsz, nc, q, w)
+    a_cum, h_intra = jax.lax.associative_scan(_combine, (ac, bc), axis=2)
+    # carry across chunks: H_c = A_c H_{c-1} + h_last_c
+    A = a_cum[:, :, -1, :]
+    hl = h_intra[:, :, -1, :]
+    _, H = jax.lax.associative_scan(_combine, (A, hl), axis=1)
+    H_prev = jnp.concatenate([jnp.zeros_like(H[:, :1]), H[:, :-1]], axis=1)
+    h = h_intra + a_cum * H_prev[:, :, None, :]
+    return h.reshape(bsz, s, w)
+
+
+def rglru_forward(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, S, D) -> (B, S, D)."""
+    dtype = x.dtype
+    u = x @ params["w_x"]["w"].astype(dtype)
+    gate = jax.nn.gelu(x @ params["w_gate"]["w"].astype(dtype))
+    u = _causal_conv(u, params["conv_w"].astype(dtype))
+    a, bi = _gates(params, u, dtype)  # (B,S,W) f32
+    b_seq = bi * u.astype(jnp.float32)
+
+    backend = getattr(cfg, "rglru_backend", "assoc")
+    if backend == "pallas":
+        from repro.kernels.ops import lru_scan
+
+        h = lru_scan(a, b_seq)
+    elif backend == "chunked":
+        h = _scan_chunked(a, b_seq, getattr(cfg, "rglru_chunk", 256) or 256)
+    else:
+        h = _scan_assoc(a, b_seq)
+    y = (h.astype(dtype) * gate) @ params["w_out"]["w"].astype(dtype)
+    return y
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, W)
+    conv: jax.Array  # (B, K-1, W)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    w = cfg.rnn_width or cfg.d_model
+    return RGLRUState(
+        jnp.zeros((batch, w), dtype), jnp.zeros((batch, _CONV_K - 1, w), dtype)
+    )
+
+
+def rglru_decode(params, x: jax.Array, state: RGLRUState, cfg: ModelConfig):
+    """One-token step. x (B, 1, D) -> (y (B,1,D), new state)."""
+    dtype = x.dtype
+    u = x @ params["w_x"]["w"].astype(dtype)  # (B,1,W)
+    gate = jax.nn.gelu(x @ params["w_gate"]["w"].astype(dtype))
+    window = jnp.concatenate([state.conv.astype(dtype), u], axis=1)  # (B,K,W)
+    u1 = jnp.sum(window * params["conv_w"].astype(dtype)[None], axis=1, keepdims=True)
+    a, bi = _gates(params, u1, dtype)  # (B,1,W)
+    h_new = a[:, 0] * state.h.astype(jnp.float32) + (bi * u1.astype(jnp.float32))[:, 0]
+    y = (h_new[:, None, :].astype(dtype) * gate) @ params["w_out"]["w"].astype(dtype)
+    return y, RGLRUState(h_new.astype(state.h.dtype), window[:, 1:].astype(state.conv.dtype))

@@ -1,0 +1,174 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked parallel form for
+train/prefill, O(1)-state recurrent form for decode.
+
+Shapes follow the reference SSD layout with n_groups = 1:
+  in_proj -> [z (d_in), xBC (d_in + 2*state), dt (H)]
+  causal depthwise conv over xBC, heads H = d_in / head_dim.
+
+The chunked algorithm (chunk length Q) computes, per chunk:
+  intra:  y_q += sum_{p<=q} (C_q . B_p) * exp(cum_q - cum_p) * dt_p * x_p
+  states: S_c  = sum_p exp(cum_last - cum_p) * dt_p * (B_p (x) x_p)
+  inter:  y_q += exp(cum_q) * (C_q . h_{c-1}),  h_c = exp(sum_c) h_{c-1} + S_c
+with the cross-chunk recurrence run as an associative scan (log-depth on
+TPU; the sequence axis can additionally be sharded — SP for long_500k).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm, rms_norm_init
+
+__all__ = ["init_ssm", "ssm_forward", "SSMState", "init_ssm_state", "ssm_decode"]
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d_in, heads, state = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * state
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, 2 * d_in + 2 * state + heads, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_ch)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((heads,), dtype),  # A = -exp(A_log) = -1
+        "D": jnp.ones((heads,), dtype),
+        "dt_bias": jnp.zeros((heads,), dtype),
+        "norm": rms_norm_init(d_in, dtype),
+        "out_proj": dense_init(k4, d_in, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over the sequence axis. x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out)
+
+
+def _split_proj(params, x, cfg: ModelConfig, dtype):
+    d_in, heads, state = _dims(cfg)
+    zxbcdt = x @ params["in_proj"]["w"].astype(dtype)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * state]
+    dt = zxbcdt[..., 2 * d_in + 2 * state :]
+    return z, xbc, dt
+
+
+def ssm_forward(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, S, D) -> (B, S, D); S must be a multiple of cfg.ssm_chunk."""
+    dtype = x.dtype
+    b, s, _ = x.shape
+    d_in, heads, n = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    if s % q != 0:
+        q = s
+    nc = s // q
+
+    z, xbc, dt = _split_proj(params, x, cfg, dtype)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(dtype))
+    xs = xbc[..., :d_in].reshape(b, s, heads, hd)
+    Bm = xbc[..., d_in : d_in + n]  # (B,S,N) group-shared
+    Cm = xbc[..., d_in + n :]  # (B,S,N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+    dA = dt * A[None, None, :]  # (B,S,H) <= 0
+
+    # chunk views
+    xs_c = xs.reshape(b, nc, q, heads, hd).astype(jnp.float32)
+    B_c = Bm.reshape(b, nc, q, n).astype(jnp.float32)
+    C_c = Cm.reshape(b, nc, q, n).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, q, heads)
+    dA_c = dA.reshape(b, nc, q, heads)
+    cum = jnp.cumsum(dA_c, axis=2)  # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic in Q) ----
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H) cum_q - cum_p
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bcqn,bcpn->bcqp", C_c, B_c)  # (B,nc,Q,Q)
+    w = cb[:, :, :, :, None] * L * dt_c[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y = jnp.einsum("bcqph,bcphd->bcqhd", w, xs_c)
+
+    # ---- chunk states + cross-chunk associative scan ----
+    last = cum[:, :, -1:, :]  # (B,nc,1,H)
+    decay_p = jnp.exp(last - cum) * dt_c  # (B,nc,Q,H)
+    S_c = jnp.einsum("bcph,bcpn,bcphd->bchnd", decay_p, B_c, xs_c)  # (B,nc,H,N,hd)
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,nc,H)
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    acc_decay, acc_state = jax.lax.associative_scan(
+        combine, (chunk_decay, S_c), axis=1
+    )
+    # state entering chunk c is acc_state shifted right by one
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(acc_state[:, :1]), acc_state[:, :-1]], axis=1
+    )
+    y += jnp.einsum("bcqn,bcqh,bchnd->bcqhd", C_c, jnp.exp(cum), h_prev)
+
+    y = y + params["D"].astype(jnp.float32)[None, None, None, :, None] * xs_c
+    y = y.reshape(b, s, d_in).astype(dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"]["w"].astype(dtype)
+
+
+class SSMState(NamedTuple):
+    h: jax.Array  # (B, H, N, hd) recurrent state
+    conv: jax.Array  # (B, K-1, d_in + 2N) conv tail
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, heads, n = _dims(cfg)
+    return SSMState(
+        jnp.zeros((batch, heads, n, cfg.ssm_head_dim), dtype),
+        jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * n), dtype),
+    )
+
+
+def ssm_decode(params, x: jax.Array, state: SSMState, cfg: ModelConfig):
+    """One-token step. x (B, 1, D) -> (y (B,1,D), new state)."""
+    dtype = x.dtype
+    b = x.shape[0]
+    d_in, heads, n = _dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    z, xbc, dt = _split_proj(params, x, cfg, dtype)
+    window = jnp.concatenate([state.conv.astype(dtype), xbc], axis=1)  # (B, K, C)
+    conv_out = jnp.sum(window * params["conv_w"].astype(dtype)[None], axis=1)
+    xbc1 = jax.nn.silu(conv_out)  # (B, C)
+    new_conv = window[:, 1:, :]
+
+    xt = xbc1[:, :d_in].reshape(b, heads, hd).astype(jnp.float32)
+    Bt = xbc1[:, d_in : d_in + n].astype(jnp.float32)
+    Ct = xbc1[:, d_in + n :].astype(jnp.float32)
+    dtt = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtt * A[None, :])  # (B,H)
+
+    h = state.h.astype(jnp.float32)
+    h_new = decay[:, :, None, None] * h + jnp.einsum(
+        "bh,bn,bhd->bhnd", dtt, Bt, xt
+    )
+    y = jnp.einsum("bn,bhnd->bhd", Ct, h_new) + params["D"].astype(jnp.float32)[
+        None, :, None
+    ] * xt
+    y = y.reshape(b, 1, d_in).astype(dtype)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z))
+    y = y @ params["out_proj"]["w"].astype(dtype)
+    return y, SSMState(h_new.astype(state.h.dtype), new_conv.astype(state.conv.dtype))

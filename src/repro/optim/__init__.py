@@ -1,0 +1,20 @@
+"""Optimizer substrate (no optax): AdamW + schedules + clipping + compression."""
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim.compression import compress_int8, decompress_int8, ef_update
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "compress_int8",
+    "cosine_schedule",
+    "decompress_int8",
+    "ef_update",
+    "global_norm",
+]

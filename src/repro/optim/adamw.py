@@ -1,0 +1,79 @@
+"""AdamW, global-norm clipping and LR schedules, built directly on pytrees.
+
+The optimizer state mirrors the param tree (same sharding specs apply —
+ZeRO-style: m/v inherit each param's PartitionSpec, so optimizer memory is
+sharded exactly like the weights).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    m: dict  # first moment, mirrors params
+    v: dict  # second moment, mirrors params
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(tree))
+    )
+
+
+def cosine_schedule(step, lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        grad_clip > 0, jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9)), 1.0
+    )
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        step_val = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_val).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,21 @@
+"""Training substrate: steps, checkpointing, fault tolerance."""
+from repro.train.checkpoint import (
+    install_preemption_handler,
+    latest_step,
+    preempted,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.step import TrainState, init_train_state, make_serve_step, make_train_step
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "install_preemption_handler",
+    "latest_step",
+    "make_serve_step",
+    "make_train_step",
+    "preempted",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

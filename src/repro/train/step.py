@@ -1,0 +1,120 @@
+"""Train / serve step builders (the functions the launcher jits).
+
+``TrainState`` carries params, AdamW state, and (optionally) the int8
+error-feedback residuals for compressed DP gradients. Steps are pure
+functions of (state, batch, rng) — stateless data + pure steps is what makes
+recompute-on-straggler and restart-replay safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import lm
+from repro.optim import adamw_init, adamw_update, cosine_schedule, ef_update
+from repro.optim.adamw import AdamWState
+
+__all__ = ["TrainState", "init_train_state", "make_train_step", "make_serve_step"]
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    ef: dict | None  # error-feedback residuals (grad compression) or None
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    params = lm.init_params(key, cfg)
+    ef = (
+        jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        if tcfg.grad_compression
+        else None
+    )
+    return TrainState(params, adamw_init(params), ef)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(state, batch, rng) -> (state, metrics)."""
+
+    def loss_with_cast(params, batch, rng):
+        if cfg.cast_params_once:
+            # cast sharded f32 masters to the compute dtype BEFORE first use:
+            # the cast is local to each shard, so every FSDP all-gather that
+            # follows moves bf16 (half the collective bytes). Gradients flow
+            # through the cast and come back f32.
+            compute = jnp.dtype(cfg.dtype)
+            params = jax.tree.map(
+                lambda p: p.astype(compute) if p.dtype == jnp.float32 else p,
+                params,
+            )
+        return lm.loss_fn(params, batch, cfg, rng, z_loss=tcfg.z_loss)
+
+    def grads_of(params, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(loss_with_cast, has_aux=True)(
+            params, batch, rng
+        )
+        metrics = dict(metrics, loss=loss)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch, rng):
+        if tcfg.microbatch and tcfg.microbatch > 0:
+            # gradient accumulation: scan over microbatches
+            def split(x):
+                n = x.shape[0] // tcfg.microbatch
+                return x.reshape((n, tcfg.microbatch) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            n_micro = jax.tree.leaves(micro)[0].shape[0]
+            rngs = jax.random.split(rng, n_micro)
+
+            def body(acc, xs):
+                mb, r = xs
+                g, m = grads_of(state.params, mb, r)
+                return jax.tree.map(jnp.add, acc, (g, m)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            zero_m = {
+                "loss": jnp.zeros(()), "ce": jnp.zeros(()),
+                "z_loss": jnp.zeros(()), "moe_aux": jnp.zeros(()),
+            }
+            (gsum, msum), _ = jax.lax.scan(body, (zero_g, zero_m), (micro, rngs))
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            metrics = jax.tree.map(lambda m: m / n_micro, msum)
+        else:
+            grads, metrics = grads_of(state.params, batch, rng)
+
+        ef = state.ef
+        if ef is not None:
+            pairs = jax.tree.map(ef_update, grads, ef)
+            grads = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+            ef = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+
+        lr = cosine_schedule(state.opt.step, tcfg.lr, tcfg.warmup_steps, tcfg.total_steps)
+        params, opt, om = adamw_update(
+            grads,
+            state.opt,
+            state.params,
+            lr=lr,
+            b1=tcfg.b1,
+            b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip,
+        )
+        metrics.update(om)
+        return TrainState(params, opt, ef), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve_step(params, state, tokens, pos, extras) -> (logits, state)."""
+
+    def serve_step(params, state, tokens, pos, extras=None):
+        return lm.decode_step(params, state, tokens, pos, cfg, extras)
+
+    return serve_step

@@ -1,0 +1,17 @@
+"""Test config: float64 for the OT numerics (models pin their own dtypes).
+
+NOTE: XLA_FLAGS host-device override is deliberately NOT set here — smoke
+tests must see the single real device; multi-device sharding tests spawn
+subprocesses with their own XLA_FLAGS (see test_distributed.py).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

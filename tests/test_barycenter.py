@@ -1,0 +1,53 @@
+"""IBP / Spar-IBP (paper Alg. 5/6, Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gibbs_kernel, ibp, normalize_cost, spar_ibp, squared_euclidean_cost
+
+
+def _setup(n=128, m=3, d=2, eps=0.05, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, d)))
+    C, _ = normalize_cost(squared_euclidean_cost(x, x))
+    K = gibbs_kernel(C, eps)
+    Ks = jnp.stack([K] * m)
+    bs = jnp.asarray(rng.dirichlet(np.ones(n), size=m))
+    # paper's smoothing: add 1e-2 * max and renormalize
+    bs = bs + 1e-2 * bs.max(axis=1, keepdims=True)
+    bs = bs / bs.sum(axis=1, keepdims=True)
+    w = jnp.full((m,), 1.0 / m)
+    return Ks, bs, w
+
+
+def test_ibp_barycenter_of_identical_measures_approaches_that_measure():
+    """Entropic bias blurs the barycenter; it must vanish as eps -> 0."""
+    errs = []
+    for eps in (0.05, 0.002):
+        Ks, bs, w = _setup(eps=eps)
+        bs_same = jnp.stack([bs[0]] * 3)
+        res = ibp(Ks, bs_same, w, tol=1e-10, max_iter=20_000)
+        errs.append(float(jnp.abs(res.q - bs_same[0]).sum()))
+        assert float(jnp.abs(res.q.sum() - 1.0)) < 1e-6
+    assert errs[1] < errs[0]
+
+
+def test_ibp_converges_and_is_simplex():
+    Ks, bs, w = _setup()
+    res = ibp(Ks, bs, w, tol=1e-10, max_iter=5000)
+    q = np.asarray(res.q)
+    assert (q >= 0).all()
+    assert abs(q.sum() - 1.0) < 1e-6
+    assert int(res.n_iter) < 5000
+
+
+def test_spar_ibp_approaches_ibp_with_s():
+    Ks, bs, w = _setup()
+    ref = ibp(Ks, bs, w, tol=1e-10, max_iter=5000).q
+    errs = []
+    for mult in (4, 32):
+        s = mult * 128.0
+        q = spar_ibp(jax.random.PRNGKey(0), Ks, bs, w, s, tol=1e-10, max_iter=5000)[0].q
+        errs.append(float(jnp.abs(q - ref).sum()))
+    assert errs[1] < errs[0]
+    assert errs[1] < 0.5

@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests (reduced configs): shapes, NaNs, gradients,
+decode/forward consistency, and a short training run that reduces loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    param_count,
+)
+
+B, S = 2, 24
+
+
+def _batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        batch["images"] = jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.num_frames, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = configs.get(arch + ":smoke")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = _batch(cfg, key)
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    logits, aux = forward(params, batch["tokens"], cfg, extras or None, key)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg, key
+    )
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert not bool(jnp.any(jnp.isnan(g)))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get(arch + ":smoke")
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    state = init_decode_state(cfg, B, S)
+    extras = None
+    if cfg.family == "vlm":
+        extras = {"images": jax.random.normal(key, (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "audio":
+        extras = {"enc_out": jax.random.normal(key, (B, cfg.num_frames, cfg.d_model), jnp.bfloat16)}
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    logits, state2 = decode_step(params, state, tok, jnp.int32(S - 1), cfg, extras)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    # state must actually change
+    changed = any(
+        not np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(state2))
+    )
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "mamba2_130m", "recurrentgemma_2b", "gemma3_12b"])
+def test_decode_matches_forward(arch):
+    """Feed tokens one-by-one through decode_step; logits must match the
+    parallel forward pass (validates cache/rope/window/state semantics)."""
+    cfg = configs.get(arch + ":smoke").replace(dtype="float32")
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    ref_logits, _ = forward(params, tokens, cfg)
+
+    state = init_decode_state(cfg, B, S, dtype=jnp.float32)
+    outs = []
+    for i in range(S):
+        lg, state = decode_step(params, state, tokens[:, i : i + 1], jnp.int32(i), cfg)
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(ref_logits), rtol=2e-2, atol=2e-3
+    )
+
+
+def test_training_reduces_loss():
+    """A few dozen steps on the structured synthetic stream must cut loss."""
+    from repro.configs.base import TrainConfig
+    from repro.data import TokenPipeline
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = configs.get("stablelm_3b:smoke")
+    tcfg = TrainConfig(seq_len=64, global_batch=8, lr=3e-3, warmup_steps=5,
+                       total_steps=60, z_loss=0.0)
+    key = jax.random.PRNGKey(0)
+    state = init_train_state(key, cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=0)
+    pipe = TokenPipeline(cfg.vocab_size, tcfg.seq_len, tcfg.global_batch, seed=0)
+    losses = []
+    for i in range(60):
+        state, metrics = step(state, {"tokens": jnp.asarray(pipe.batch(i))}, jax.random.fold_in(key, i))
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:5]) - 0.5, losses[::10]
+
+
+def test_grad_accumulation_matches_full_batch():
+    from repro.configs.base import TrainConfig
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = configs.get("stablelm_3b:smoke").replace(dtype="float32")
+    key = jax.random.PRNGKey(3)
+    tokens = jax.random.randint(key, (8, 32), 0, cfg.vocab_size)
+    t_full = TrainConfig(seq_len=32, global_batch=8, lr=1e-3, grad_clip=0.0, z_loss=0.0)
+    t_micro = TrainConfig(seq_len=32, global_batch=8, microbatch=2, lr=1e-3,
+                          grad_clip=0.0, z_loss=0.0)
+    s0 = init_train_state(key, cfg, t_full)
+    s1 = init_train_state(key, cfg, t_micro)
+    # fix the same rng for every microbatch comparison: use rng-independent cfg
+    st_f, _ = make_train_step(cfg, t_full)(s0, {"tokens": tokens}, key)
+    st_m, _ = make_train_step(cfg, t_micro)(s1, {"tokens": tokens}, key)
+    # parameters should move in nearly the same direction (mean-of-grads ==
+    # grad-of-mean for CE over equal-sized microbatches)
+    for a, b in zip(jax.tree.leaves(st_f.params), jax.tree.leaves(st_m.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-4)
+
+
+def test_param_counts_full_configs_scale():
+    """Full configs instantiate abstractly with plausible parameter counts."""
+    expectations = {
+        "olmoe_1b_7b": (6e9, 8e9),
+        "llama4_scout_17b_a16e": (90e9, 115e9),
+        "qwen3_14b": (13e9, 16e9),
+        "stablelm_3b": (2.5e9, 4e9),
+        "starcoder2_7b": (6e9, 11e9),  # SwiGLU (3-matrix) FFN vs paper's GELU
+        "gemma3_12b": (10e9, 14e9),
+        "mamba2_130m": (0.1e9, 0.2e9),
+        "llama32_vision_11b": (8e9, 12e9),
+        "whisper_large_v3": (1.5e9, 2.5e9),
+        "recurrentgemma_2b": (2.5e9, 4.5e9),
+    }
+    for arch, (lo, hi) in expectations.items():
+        cfg = configs.get(arch)
+        abs_params = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        n = sum(int(x.size) for x in jax.tree.leaves(abs_params))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9}, {hi/1e9}]"

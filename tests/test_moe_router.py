@@ -1,0 +1,74 @@
+"""MoE routing: Sinkhorn balancing and the Spar-Sink router (the paper's
+technique as an LM feature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.moe import init_moe, moe_ffn, sinkhorn_router_probs
+
+
+def _cfg(router):
+    return configs.get("olmoe_1b_7b:smoke").replace(router=router)
+
+
+def _load_imbalance(probs, k):
+    """Coefficient of variation of expert loads under top-k assignment."""
+    _, idx = jax.lax.top_k(probs, k)
+    e = probs.shape[-1]
+    counts = np.bincount(np.asarray(idx).ravel(), minlength=e)
+    return counts.std() / max(counts.mean(), 1e-9)
+
+
+def test_sinkhorn_router_balances_loads():
+    key = jax.random.PRNGKey(0)
+    cfg = _cfg("sinkhorn")
+    # skewed affinities: softmax routing collapses onto few experts
+    scores = jax.random.normal(key, (2, 256, cfg.num_experts)) * 3.0
+    scores = scores + jnp.linspace(0, 4.0, cfg.num_experts)[None, None, :]
+    p_soft = jax.nn.softmax(scores, axis=-1)
+    p_sink = sinkhorn_router_probs(scores, cfg, key)
+    k = cfg.experts_per_token
+    assert _load_imbalance(p_sink, k) < _load_imbalance(p_soft, k) * 0.8
+
+
+def test_spar_sink_router_close_to_sinkhorn():
+    key = jax.random.PRNGKey(1)
+    cfg_dense = _cfg("sinkhorn")
+    cfg_spar = _cfg("spar_sink").replace(router_sample_frac=0.9)
+    scores = jax.random.normal(key, (2, 128, cfg_dense.num_experts))
+    p1 = sinkhorn_router_probs(scores, cfg_dense, key)
+    p2 = sinkhorn_router_probs(scores, cfg_spar, key)
+    # at ~90% sampling the sketched plan's top-k choice mostly agrees
+    top1 = jnp.argmax(p1, -1) == jnp.argmax(p2, -1)
+    assert float(top1.mean()) > 0.7
+
+
+@pytest.mark.parametrize("router", ["softmax", "sinkhorn", "spar_sink"])
+def test_moe_ffn_runs_all_routers(router):
+    cfg = _cfg(router)
+    key = jax.random.PRNGKey(2)
+    params = init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 64, cfg.d_model), jnp.bfloat16)
+    out, aux = moe_ffn(params, x, cfg, key)
+    assert out.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(out)))
+    assert np.isfinite(float(aux))
+
+
+def test_moe_router_is_differentiable():
+    cfg = _cfg("sinkhorn")
+    key = jax.random.PRNGKey(3)
+    params = init_moe(key, cfg)
+    x = jax.random.normal(key, (1, 32, cfg.d_model), jnp.float32)
+
+    def f(p):
+        out, aux = moe_ffn(p, x, cfg, key)
+        return jnp.sum(out.astype(jnp.float32) ** 2) + aux
+
+    grads = jax.grad(f)(params)
+    gr = grads["router"]["w"]
+    assert float(jnp.abs(gr).sum()) > 0  # gradient flows through the router
+    for g in jax.tree.leaves(grads):
+        assert not bool(jnp.any(jnp.isnan(g)))

@@ -1,0 +1,66 @@
+"""Proximal-point unregularized OT (the paper's Sec.-7 future work,
+implemented as a beyond-paper extension — core/proximal.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gibbs_kernel, normalize_cost, squared_euclidean_cost, sinkhorn
+from repro.core.proximal import prox_sinkhorn, prox_spar_sink
+from repro.core.sinkhorn import plan_from_scalings
+from repro.core.spar_sink import s0
+from tests.test_sinkhorn import exact_ot_lp
+
+
+def _problem(n=30, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, d)))
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n)))
+    C, _ = normalize_cost(squared_euclidean_cost(x, x))
+    return a, b, C
+
+
+def test_prox_approaches_unregularized_lp():
+    """At moderate eps the proximal iteration reaches the LP optimum far
+    closer than single-shot entropic Sinkhorn at the same eps."""
+    a, b, C = _problem()
+    lp = exact_ot_lp(C, a, b)
+    eps = 0.05
+    res, T = prox_sinkhorn(C, a, b, eps, n_outer=40, inner_iters=2000)
+    assert float(res.marginal_err) < 1e-5
+    # entropic baseline at the same eps
+    K = gibbs_kernel(C, eps)
+    r = sinkhorn(K, a, b, tol=1e-10, max_iter=20_000)
+    T_ent = plan_from_scalings(r.u, K, r.v)
+    ent_cost = float(jnp.sum(T_ent * C))
+    assert abs(float(res.cost) - lp) < 0.2 * abs(ent_cost - lp) + 1e-6
+    assert abs(float(res.cost) - lp) < 5e-3
+
+
+def test_prox_spar_sink_error_decreases_with_s():
+    """The proximal iteration sharpens the plan toward a near-permutation
+    support, so sketch-support bias dominates (a finding the paper's
+    future-work remark anticipates): the sparse prox cost upper-bounds the
+    dense one and converges to it as s grows."""
+    a, b, C = _problem(n=200, seed=1)
+    eps = 0.05
+    res_d, _ = prox_sinkhorn(C, a, b, eps, n_outer=15, inner_iters=1000)
+    rels = []
+    for mult in (16, 64):
+        vals = [
+            float(prox_spar_sink(jax.random.PRNGKey(i), C, a, b, eps,
+                                 mult * s0(200), n_outer=15, inner_iters=1000).cost)
+            for i in range(4)
+        ]
+        rels.append((np.mean(vals) - float(res_d.cost)) / max(float(res_d.cost), 1e-9))
+    assert rels[0] > -0.05  # restricted-support optimum upper-bounds dense
+    assert rels[1] < rels[0]  # and converges with the budget
+    assert rels[1] < 1.0
+
+
+def test_prox_spar_sink_marginals_feasible():
+    a, b, C = _problem(n=200, seed=2)
+    res = prox_spar_sink(jax.random.PRNGKey(0), C, a, b, 0.05, 16 * s0(200),
+                         n_outer=10, inner_iters=1000)
+    assert float(res.marginal_err) < 0.05

@@ -1,0 +1,173 @@
+"""Dense Sinkhorn solvers vs exact references and each other."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy.optimize import linprog
+
+from repro.core import (
+    gibbs_kernel,
+    log_gibbs_kernel,
+    normalize_cost,
+    ot_cost_from_plan,
+    plan_from_potentials,
+    plan_from_scalings,
+    sinkhorn,
+    sinkhorn_log,
+    sinkhorn_uot,
+    sinkhorn_uot_log,
+    squared_euclidean_cost,
+    uot_cost_from_plan,
+    wfr_cost,
+)
+
+
+def _problem(n=60, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, d)))
+    a = rng.dirichlet(np.ones(n))
+    b = rng.dirichlet(np.ones(n))
+    C, _ = normalize_cost(squared_euclidean_cost(x, x))
+    return jnp.asarray(a), jnp.asarray(b), C
+
+
+def exact_ot_lp(C, a, b):
+    """Unregularized OT via scipy linprog (the eps->0 oracle)."""
+    n, m = C.shape
+    A_eq = []
+    for i in range(n):
+        row = np.zeros((n, m))
+        row[i, :] = 1
+        A_eq.append(row.ravel())
+    for j in range(m):
+        col = np.zeros((n, m))
+        col[:, j] = 1
+        A_eq.append(col.ravel())
+    res = linprog(
+        np.asarray(C).ravel(),
+        A_eq=np.asarray(A_eq),
+        b_eq=np.concatenate([np.asarray(a), np.asarray(b)]),
+        bounds=(0, None),
+        method="highs",
+    )
+    assert res.success
+    return res.fun
+
+
+def test_marginals_satisfied():
+    a, b, C = _problem()
+    K = gibbs_kernel(C, 0.05)
+    res = sinkhorn(K, a, b, tol=1e-12, max_iter=10_000)
+    T = plan_from_scalings(res.u, K, res.v)
+    np.testing.assert_allclose(np.asarray(T.sum(1)), np.asarray(a), atol=1e-9)
+    np.testing.assert_allclose(np.asarray(T.sum(0)), np.asarray(b), atol=1e-9)
+
+
+def test_entropic_ot_approaches_lp():
+    """OT_eps -> OT as eps -> 0 (Cuturi 2013); entropic value upper-bounds LP."""
+    a, b, C = _problem(n=25)
+    lp = exact_ot_lp(C, a, b)
+    prev_gap = None
+    for eps in [0.05, 0.01, 0.002]:
+        res = sinkhorn_log(log_gibbs_kernel(C, eps), a, b, eps, tol=1e-13, max_iter=50_000)
+        T = plan_from_potentials(res.u, log_gibbs_kernel(C, eps), res.v, eps)
+        cost = float(jnp.sum(T * C))  # transport part only
+        gap = abs(cost - lp)
+        if prev_gap is not None:
+            assert gap <= prev_gap + 1e-9
+        prev_gap = gap
+    assert prev_gap < 5e-3
+
+
+def test_log_and_scaling_domains_agree():
+    a, b, C = _problem()
+    eps = 0.03
+    K = gibbs_kernel(C, eps)
+    r1 = sinkhorn(K, a, b, tol=1e-13, max_iter=20_000)
+    r2 = sinkhorn_log(log_gibbs_kernel(C, eps), a, b, eps, tol=1e-13, max_iter=20_000)
+    T1 = plan_from_scalings(r1.u, K, r1.v)
+    T2 = plan_from_potentials(r2.u, log_gibbs_kernel(C, eps), r2.v, eps)
+    np.testing.assert_allclose(np.asarray(T1), np.asarray(T2), atol=1e-10)
+
+
+def test_log_domain_survives_small_eps():
+    """eps = 1e-3 with O(1) costs: scaling domain underflows, log domain works."""
+    a, b, C = _problem()
+    eps = 1e-3
+    res = sinkhorn_log(log_gibbs_kernel(C, eps), a, b, eps, tol=1e-11, max_iter=100_000)
+    T = plan_from_potentials(res.u, log_gibbs_kernel(C, eps), res.v, eps)
+    assert not np.any(np.isnan(np.asarray(T)))
+    np.testing.assert_allclose(np.asarray(T.sum(1)), np.asarray(a), atol=1e-6)
+
+
+def test_uot_degenerates_to_ot_large_lambda():
+    """Paper Sec 2.2: lam -> inf recovers Algorithm 1."""
+    a, b, C = _problem()
+    eps = 0.05
+    K = gibbs_kernel(C, eps)
+    r_ot = sinkhorn(K, a, b, tol=1e-12, max_iter=20_000)
+    r_uot = sinkhorn_uot(K, a, b, 1e6, eps, tol=1e-12, max_iter=20_000)
+    T_ot = plan_from_scalings(r_ot.u, K, r_ot.v)
+    T_uot = plan_from_scalings(r_uot.u, K, r_uot.v)
+    np.testing.assert_allclose(np.asarray(T_uot), np.asarray(T_ot), atol=1e-5)
+
+
+def test_uot_mass_interpolates_with_lambda():
+    """lam >> eps forces the plan mass to compromise between ||a|| and ||b||
+    (the marginal KL terms dominate); lam ~ 0 lets T drift to K (entropy).
+    Paper Sec 2.2: the paper's masses 5 and 3."""
+    a, b, C = _problem()
+    a, b = a * 5.0, b * 3.0
+    eps = 0.01
+    K = gibbs_kernel(C, eps)
+    res = sinkhorn_uot(K, a, b, 100.0, eps, tol=1e-12, max_iter=50_000)
+    T = plan_from_scalings(res.u, K, res.v)
+    mass = float(T.sum())
+    assert 2.5 < mass < 5.5  # near sqrt(5*3) ~ 3.9 for balanced-KL compromise
+    val = uot_cost_from_plan(T, C, a, b, 100.0, eps)
+    assert np.isfinite(float(val))
+    # lam -> 0: plan approaches the kernel itself
+    res0 = sinkhorn_uot(K, a, b, 1e-6, eps, tol=1e-12, max_iter=1000)
+    T0 = plan_from_scalings(res0.u, K, res0.v)
+    np.testing.assert_allclose(np.asarray(T0), np.asarray(K), rtol=1e-2, atol=1e-8)
+
+
+def test_uot_log_agrees_with_scaling():
+    a, b, C = _problem()
+    a, b = a * 5.0, b * 3.0
+    eps, lam = 0.1, 0.5
+    K = gibbs_kernel(C, eps)
+    r1 = sinkhorn_uot(K, a, b, lam, eps, tol=1e-13, max_iter=30_000)
+    r2 = sinkhorn_uot_log(log_gibbs_kernel(C, eps), a, b, lam, eps, tol=1e-13, max_iter=30_000)
+    T1 = plan_from_scalings(r1.u, K, r1.v)
+    T2 = plan_from_potentials(r2.u, log_gibbs_kernel(C, eps), r2.v, eps)
+    np.testing.assert_allclose(np.asarray(T1), np.asarray(T2), atol=1e-8)
+
+
+def test_wfr_kernel_blocks_long_range():
+    """WFR cost: transport blocked beyond pi*eta (paper Sec 2.2)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(size=(40, 2)))
+    eta = 0.1
+    C = wfr_cost(x, eta=eta)
+    d = np.sqrt(np.asarray(squared_euclidean_cost(x, x)))
+    blocked = d >= np.pi * eta
+    K = gibbs_kernel(C, 0.5)
+    assert np.all(np.asarray(K)[blocked] == 0.0)
+    assert np.all(np.asarray(K)[~blocked] > 0.0)
+
+
+def test_ot_value_matches_dual_free_energy():
+    """Objective consistency: <T,C> - eps H(T) computed two ways."""
+    a, b, C = _problem()
+    eps = 0.05
+    K = gibbs_kernel(C, eps)
+    res = sinkhorn(K, a, b, tol=1e-13, max_iter=20_000)
+    T = plan_from_scalings(res.u, K, res.v)
+    v1 = float(ot_cost_from_plan(T, C, eps))
+    # alternative: dual value a.f + b.g - eps * sum(T) + eps (at optimum)
+    f = eps * jnp.log(res.u)
+    g = eps * jnp.log(res.v)
+    v2 = float(a @ f + b @ g - eps * T.sum() + eps * 0)
+    # At the fixed point <T,C> - eps H(T) = a.f + b.g - eps*sum(T)
+    assert abs(v1 - v2) < 1e-8

@@ -1,0 +1,131 @@
+"""End-to-end Spar-Sink behaviour: consistency (Thm 1/2), error decreasing
+in s, iteration count parity with Sinkhorn (Thm 3), Rand-Sink comparison."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    gibbs_kernel,
+    normalize_cost,
+    ot_cost_from_plan,
+    plan_from_scalings,
+    s0,
+    sinkhorn,
+    sinkhorn_uot,
+    spar_sink_ot,
+    spar_sink_uot,
+    squared_euclidean_cost,
+    uniform_probs,
+    uot_cost_from_plan,
+    wfr_cost,
+)
+from repro.data import make_measures, make_uot_measures, wfr_eta_for_density
+
+EPS = 0.1
+
+
+@pytest.fixture(scope="module")
+def ot_problem():
+    a, b, x = make_measures("C1", n=512, d=5, seed=0)
+    C, _ = normalize_cost(squared_euclidean_cost(jnp.asarray(x), jnp.asarray(x)))
+    K = gibbs_kernel(C, EPS)
+    res = sinkhorn(K, jnp.asarray(a), jnp.asarray(b), tol=1e-10, max_iter=20_000)
+    T = plan_from_scalings(res.u, K, res.v)
+    truth = float(ot_cost_from_plan(T, C, EPS))
+    return jnp.asarray(a), jnp.asarray(b), C, truth, int(res.n_iter)
+
+
+def _rmae(est, truth):
+    return abs(est - truth) / abs(truth)
+
+
+def test_error_decreases_with_s(ot_problem):
+    a, b, C, truth, _ = ot_problem
+    n = a.shape[0]
+    errs = []
+    for mult in (2, 8, 32):
+        s = mult * s0(n)
+        vals = [
+            float(spar_sink_ot(jax.random.PRNGKey(i), C, a, b, EPS, s,
+                               tol=1e-10, max_iter=20_000).value)
+            for i in range(8)
+        ]
+        errs.append(np.mean([_rmae(v, truth) for v in vals]))
+    assert errs[2] < errs[0], f"RMAE should fall with s: {errs}"
+    assert errs[2] < 0.5
+
+
+def test_spar_sink_beats_rand_sink(ot_problem):
+    """Fig. 2: importance probabilities beat uniform at equal budget."""
+    a, b, C, truth, _ = ot_problem
+    n = a.shape[0]
+    s = 8 * s0(n)
+    spar, rand = [], []
+    for i in range(10):
+        key = jax.random.PRNGKey(100 + i)
+        spar.append(_rmae(float(spar_sink_ot(key, C, a, b, EPS, s,
+                                             tol=1e-10, max_iter=20_000).value), truth))
+        rand.append(_rmae(float(spar_sink_ot(key, C, a, b, EPS, s,
+                                             probs=uniform_probs(n, n, C.dtype),
+                                             tol=1e-10, max_iter=20_000).value), truth))
+    assert np.mean(spar) < np.mean(rand)
+
+
+def test_iteration_count_same_order(ot_problem):
+    """Thm 3: Spar-Sink converges in the same order of iterations."""
+    a, b, C, truth, sink_iters = ot_problem
+    n = a.shape[0]
+    sol = spar_sink_ot(jax.random.PRNGKey(0), C, a, b, EPS, 8 * s0(n),
+                       tol=1e-10, max_iter=20_000)
+    assert int(sol.result.n_iter) <= 10 * max(sink_iters, 1)
+
+
+def test_uot_wfr_consistency():
+    """Thm 2 on the paper's WFR setting (sparse near-full-rank kernel)."""
+    a, b, x = make_uot_measures("C1", n=512, d=5, seed=1)
+    eta = wfr_eta_for_density(x, 0.5)  # R2
+    C = wfr_cost(jnp.asarray(x), eta=eta)
+    lam = 0.1
+    K = gibbs_kernel(C, EPS)
+    a, b = jnp.asarray(a), jnp.asarray(b)
+    res = sinkhorn_uot(K, a, b, lam, EPS, tol=1e-10, max_iter=20_000)
+    T = plan_from_scalings(res.u, K, res.v)
+    truth = float(uot_cost_from_plan(T, C, a, b, lam, EPS))
+
+    errs = []
+    for mult in (2, 16):
+        vals = [
+            float(spar_sink_uot(jax.random.PRNGKey(i), C, a, b, lam, EPS,
+                                mult * s0(512), tol=1e-10, max_iter=20_000).value)
+            for i in range(6)
+        ]
+        errs.append(np.mean([_rmae(v, truth) for v in vals]))
+    assert errs[1] < errs[0]
+    assert errs[1] < 0.2
+
+
+def test_methods_agree_dense_coo_block(ot_problem):
+    a, b, C, truth, _ = ot_problem
+    n = a.shape[0]
+    s = 16 * s0(n)
+    key = jax.random.PRNGKey(42)
+    vd = float(spar_sink_ot(key, C, a, b, EPS, s, method="dense",
+                            tol=1e-10, max_iter=20_000).value)
+    vc = float(spar_sink_ot(key, C, a, b, EPS, s, method="coo",
+                            tol=1e-10, max_iter=20_000).value)
+    assert abs(vd - vc) < 1e-8 * max(1.0, abs(vd))
+    vb = float(spar_sink_ot(key, C, a, b, EPS, s, method="block_ell", block=64,
+                            tol=1e-10, max_iter=20_000).value)
+    # block path samples tiles, not elements: same estimand, similar accuracy
+    assert _rmae(vb, truth) < 0.5
+
+
+def test_shrinkage_mixes_uniform(ot_problem):
+    """Thm 1 condition (ii): uniform mixing keeps p* bounded below; solver
+    still consistent."""
+    a, b, C, truth, _ = ot_problem
+    n = a.shape[0]
+    sol = spar_sink_ot(jax.random.PRNGKey(1), C, a, b, EPS, 16 * s0(n),
+                       shrinkage=0.2, tol=1e-10, max_iter=20_000)
+    assert _rmae(float(sol.value), truth) < 0.5

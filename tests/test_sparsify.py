@@ -1,0 +1,153 @@
+"""Sparsification invariants: eq. (7)/(9)/(11) — unbiasedness, probability
+normalization, representation equivalence. Hypothesis drives the shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gibbs_kernel, normalize_cost, squared_euclidean_cost
+from repro.core import sparsify
+
+
+def _setup(n=64, d=3, seed=0, eps=0.1):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, d)))
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n)))
+    C, _ = normalize_cost(squared_euclidean_cost(x, x))
+    return a, b, C, gibbs_kernel(C, eps)
+
+
+@settings(deadline=None, max_examples=10)
+@given(n=st.sampled_from([16, 32, 64]), seed=st.integers(0, 10_000))
+def test_ot_probs_normalized(n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n)))
+    p = sparsify.ot_sampling_probs(a, b)
+    assert float(jnp.abs(p.sum() - 1.0)) < 1e-9
+    assert float(p.min()) >= 0.0
+
+
+@settings(deadline=None, max_examples=10)
+@given(lam=st.sampled_from([0.05, 0.5, 5.0]), seed=st.integers(0, 1000))
+def test_uot_probs_normalized_and_blocked_zero(lam, seed):
+    a, b, C, K = _setup(seed=seed)
+    logK = jnp.where(K > 0, jnp.log(jnp.where(K > 0, K, 1.0)), -jnp.inf)
+    p = sparsify.uot_sampling_probs(a, b, logK, lam, 0.1)
+    assert float(jnp.abs(p.sum() - 1.0)) < 1e-8
+    assert float(p.min()) >= 0.0
+
+
+def test_uot_probs_degenerate_to_ot_probs():
+    """Paper: eq.(11) -> eq.(9) as lam -> inf."""
+    a, b, C, K = _setup()
+    logK = -C / 0.1
+    p_uot = sparsify.uot_sampling_probs(a, b, logK, 1e9, 0.1)
+    p_ot = sparsify.ot_sampling_probs(a, b)
+    np.testing.assert_allclose(np.asarray(p_uot), np.asarray(p_ot), atol=1e-10)
+
+
+def test_sketch_unbiased():
+    """E[K~] = K over Poisson draws (eq. 7)."""
+    a, b, C, K = _setup(n=32)
+    probs = sparsify.ot_sampling_probs(a, b)
+    s = 200.0
+    acc = jnp.zeros_like(K)
+    n_rep = 400
+    for i in range(n_rep):
+        acc = acc + sparsify.sparsify_dense(jax.random.PRNGKey(i), K, probs, s)
+    mean = acc / n_rep
+    # elementwise MC error scales with sqrt(K^2 (1-p)/p / n_rep); check bulk
+    err = np.asarray(jnp.abs(mean - K))
+    p_star = np.asarray(sparsify.poisson_keep_probs(probs, s))
+    tol = 5.0 * np.asarray(K) * np.sqrt((1 - p_star) / np.maximum(p_star, 1e-12) / n_rep) + 1e-12
+    assert (err <= tol).mean() > 0.97  # ~5 sigma bound holds for the bulk
+
+
+def test_expected_nnz_bounded_by_s():
+    a, b, C, K = _setup(n=64)
+    probs = sparsify.ot_sampling_probs(a, b)
+    s = 500.0
+    counts = [
+        int(jnp.sum(sparsify.sparsify_dense(jax.random.PRNGKey(i), K, probs, s) > 0))
+        for i in range(50)
+    ]
+    assert np.mean(counts) <= s + 3 * np.sqrt(s)  # E[nnz] <= s (paper Sec 3.2)
+
+
+def test_coo_equals_dense():
+    a, b, C, K = _setup(n=48)
+    probs = sparsify.ot_sampling_probs(a, b)
+    key = jax.random.PRNGKey(7)
+    s = 300.0
+    dense = sparsify.sparsify_dense(key, K, probs, s)
+    sk = sparsify.sparsify_coo(key, K, probs, s, cap=600)
+    re = jnp.zeros_like(K).at[sk.rows, sk.cols].add(sk.vals)
+    np.testing.assert_allclose(np.asarray(re), np.asarray(dense), rtol=1e-12)
+
+
+def test_coo_matvec_matches_dense():
+    a, b, C, K = _setup(n=48)
+    probs = sparsify.ot_sampling_probs(a, b)
+    key = jax.random.PRNGKey(3)
+    sk = sparsify.sparsify_coo(key, K, probs, 300.0, cap=600)
+    dense = sparsify.sparsify_dense(key, K, probs, 300.0)
+    v = jnp.asarray(np.random.default_rng(0).uniform(size=48))
+    np.testing.assert_allclose(
+        np.asarray(sparsify.coo_matvec(sk, v)), np.asarray(dense @ v), rtol=1e-10
+    )
+    np.testing.assert_allclose(
+        np.asarray(sparsify.coo_rmatvec(sk, v)), np.asarray(dense.T @ v), rtol=1e-10
+    )
+
+
+def test_tile_probs_factorized_exact():
+    """OT tile probabilities (factorized O(n)) == elementwise aggregation."""
+    a, b, C, K = _setup(n=64)
+    p = sparsify.ot_sampling_probs(a, b)
+    bk = 16
+    t1 = sparsify.ot_tile_probs(a, b, bk)
+    t2 = sparsify.tile_probs_from_elem(p, bk)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), atol=1e-12)
+
+
+def test_block_ell_unbiased():
+    """Tile-granular sketch is unbiased (DESIGN §3 tile analogue of eq. 7)."""
+    a, b, C, K = _setup(n=64)
+    bk = 16
+    tp = sparsify.ot_tile_probs(a, b, bk)
+    s = 1500.0
+    acc = jnp.zeros_like(K)
+    n_rep = 300
+    for i in range(n_rep):
+        sk = sparsify.sparsify_block_ell(jax.random.PRNGKey(i), K, tp, s, bk, 4)
+        acc = acc + sparsify.block_ell_to_dense(sk)
+    mean = np.asarray(acc / n_rep)
+    assert np.abs(mean - np.asarray(K)).mean() < 0.05 * np.asarray(K).mean() + 0.02
+
+
+def test_block_ell_pair_transpose_consistent():
+    a, b, C, K = _setup(n=64)
+    bk = 16
+    tp = sparsify.ot_tile_probs(a, b, bk)
+    sk, skT = sparsify.sparsify_block_ell_pair(jax.random.PRNGKey(5), K, tp, 800.0, bk, 4)
+    d1 = sparsify.block_ell_to_dense(sk)
+    d2 = sparsify.block_ell_to_dense(skT)
+    np.testing.assert_allclose(np.asarray(d1.T), np.asarray(d2), rtol=1e-10)
+
+
+def test_block_ell_matvec_roundtrip():
+    a, b, C, K = _setup(n=64)
+    bk = 16
+    tp = sparsify.ot_tile_probs(a, b, bk)
+    sk = sparsify.sparsify_block_ell(jax.random.PRNGKey(9), K, tp, 800.0, bk, 4)
+    dense = sparsify.block_ell_to_dense(sk)
+    v = jnp.asarray(np.random.default_rng(1).uniform(size=64))
+    np.testing.assert_allclose(
+        np.asarray(sparsify.block_ell_matvec(sk, v)), np.asarray(dense @ v), rtol=1e-9
+    )
+    np.testing.assert_allclose(
+        np.asarray(sparsify.block_ell_rmatvec(sk, v)), np.asarray(dense.T @ v), rtol=1e-9
+    )

@@ -1,0 +1,88 @@
+"""Op-level breakdown of a dry-run cell's compiled HLO: bytes by op kind.
+
+PYTHONPATH=src python tools/hlo_breakdown.py --arch olmoe_1b_7b --shape train_4k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import base as cfg_base
+from repro.launch import specs as specs_lib
+from repro.launch.dryrun import _DTYPE_BYTES, _layer_reduced, make_production_mesh
+
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\])[^ ]*)\s+([a-z\-]+)[.\d]*\(")
+
+
+def shape_bytes(text):
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--units", type=int, default=1)
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+
+    cfg = cfg_base.get(args.arch)
+    if cfg.family != "hybrid":
+        cfg = _layer_reduced(cfg, args.units)
+    seq, gb, kind = cfg_base.shape_of(args.shape)
+    mesh = make_production_mesh()
+    step, _ = specs_lib.step_for(cfg, args.shape)
+    with mesh:
+        if kind == "train":
+            a, sh, d = specs_lib.abstract_train_args(cfg, args.shape, mesh)
+            jt = jax.jit(step, in_shardings=sh, donate_argnums=d)
+        elif kind == "prefill":
+            a, sh = specs_lib.abstract_prefill_args(cfg, args.shape, mesh)
+            jt = jax.jit(step, in_shardings=sh)
+        else:
+            a, sh, d = specs_lib.abstract_serve_args(cfg, args.shape, mesh)
+            jt = jax.jit(step, in_shardings=sh, donate_argnums=d)
+        compiled = jt.lower(*a).compile()
+
+    by_kind = defaultdict(lambda: [0, 0])
+    coll_lines = []
+    for line in compiled.as_text().splitlines():
+        mo = OP_RE.match(line)
+        if not mo:
+            continue
+        shp, op = mo.groups()
+        b = shape_bytes(shp)
+        by_kind[op][0] += b
+        by_kind[op][1] += 1
+        if op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute") and b > 1 << 22:
+            coll_lines.append((b, line.strip()[:180]))
+    rows = sorted(by_kind.items(), key=lambda kv: -kv[1][0])[: args.top]
+    total = sum(v[0] for v in by_kind.values())
+    print(f"total result-bytes {total/1e9:.1f} GB across {sum(v[1] for v in by_kind.values())} ops")
+    for op, (b, c) in rows:
+        print(f"  {op:<28s} {b/1e9:10.2f} GB  x{c}")
+    print("\nlargest collectives:")
+    for b, line in sorted(coll_lines, reverse=True)[:10]:
+        print(f"  {b/1e9:8.2f} GB  {line}")
+
+
+if __name__ == "__main__":
+    main()
