@@ -1,22 +1,17 @@
 """Paper Fig. 2: RMAE(OT) vs subsample size s for the subsampling methods
-(Spar-Sink, Rand-Sink, Nys-Sink) across data patterns C1-C3 and eps."""
+(Spar-Sink, Rand-Sink, Nys-Sink) across data patterns C1-C3 and eps.
+
+All solvers run through the unified ``solve(problem, method=...)`` registry.
+"""
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, log, ot_problem, rmae, timed
-from repro.core import (
-    gibbs_kernel,
-    nys_sink,
-    ot_cost_from_plan,
-    s0,
-    spar_sink_ot,
-    uniform_probs,
-)
+from repro.core import s0, solve
 
 
 def run(patterns=("C1", "C2", "C3"), eps_grid=(1e-1, 1e-2), n=1000, d=5,
@@ -24,35 +19,35 @@ def run(patterns=("C1", "C2", "C3"), eps_grid=(1e-1, 1e-2), n=1000, d=5,
     rows = []
     for pattern in patterns:
         for eps in eps_grid:
-            a, b, C, truth = ot_problem(pattern, n, d, eps)
+            problem, truth = ot_problem(pattern, n, d, eps)
             base = s0(n)
             for mult in mults:
                 s = mult * base
-                for method, kw in (
-                    ("spar_sink", {}),
-                    ("rand_sink", {"probs": uniform_probs(n, n, C.dtype)}),
+                for label, method in (
+                    ("spar_sink", "spar_sink_coo"),
+                    ("rand_sink", "rand_sink"),
                 ):
                     vals, t = [], 0.0
                     for i in range(n_rep):
                         sol, dt = timed(
-                            spar_sink_ot, jax.random.PRNGKey(i), C, a, b, eps,
-                            float(s), tol=1e-9, max_iter=10_000, **kw,
+                            solve, problem, method=method,
+                            key=jax.random.PRNGKey(i), s=float(s),
+                            tol=1e-9, max_iter=10_000,
                         )
                         vals.append(float(sol.value))
                         t += dt
                     err = rmae(vals, truth)
-                    rows.append((pattern, eps, method, mult, err))
-                    emit(f"fig2/{pattern}/eps{eps:g}/{method}/s{mult}x",
+                    rows.append((pattern, eps, label, mult, err))
+                    emit(f"fig2/{pattern}/eps{eps:g}/{label}/s{mult}x",
                          t / n_rep * 1e6, f"rmae={err:.4f}")
                 # Nys-Sink at matched budget r = ceil(s/n)
                 r = max(2, int(np.ceil(s / n)))
-                K = gibbs_kernel(C, eps)
                 vals, t = [], 0.0
                 for i in range(n_rep):
-                    (res, nk), dt = timed(nys_sink, jax.random.PRNGKey(i), K, a, b, r,
-                                          tol=1e-9, max_iter=10_000)
-                    T = res.u[:, None] * nk.dense() * res.v[None, :]
-                    vals.append(float(ot_cost_from_plan(T, C, eps)))
+                    sol, dt = timed(solve, problem, method="nys_sink",
+                                    key=jax.random.PRNGKey(i), rank=r,
+                                    tol=1e-9, max_iter=10_000)
+                    vals.append(float(sol.value))
                     t += dt
                 err = rmae(vals, truth)
                 rows.append((pattern, eps, "nys_sink", mult, err))

@@ -1,5 +1,9 @@
 """Paper Fig. 3 (+ Fig. 8): RMAE(UOT/WFR) vs s across sparsity regimes
-R1-R3 (70/50/30% kernel density). The regime where Nys-Sink fails."""
+R1-R3 (70/50/30% kernel density). The regime where Nys-Sink fails.
+
+All solvers run through the unified ``solve(problem, method=...)`` registry;
+the unbalanced exponent ``fe = lam/(lam+eps)`` comes from the `UOTProblem`.
+"""
 from __future__ import annotations
 
 import argparse
@@ -8,15 +12,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, log, rmae, timed, uot_problem
-from repro.core import (
-    gibbs_kernel,
-    nys_sink,
-    plan_from_scalings,
-    s0,
-    spar_sink_uot,
-    uniform_probs,
-    uot_cost_from_plan,
-)
+from repro.core import s0, solve
 
 DENSITIES = {"R1": 0.7, "R2": 0.5, "R3": 0.3}
 
@@ -25,34 +21,33 @@ def run(patterns=("C1",), regimes=("R1", "R2", "R3"), n=1000, d=5,
         eps=0.1, lam=0.1, mults=(2, 8), n_rep=8):
     for pattern in patterns:
         for reg in regimes:
-            a, b, C, truth = uot_problem(pattern, n, d, eps, lam, DENSITIES[reg])
+            problem, truth = uot_problem(pattern, n, d, eps, lam, DENSITIES[reg])
             for mult in mults:
                 s = mult * s0(n)
-                for method, kw in (
-                    ("spar_sink", {}),
-                    ("rand_sink", {"probs": uniform_probs(n, n, C.dtype)}),
+                for label, method in (
+                    ("spar_sink", "spar_sink_coo"),
+                    ("rand_sink", "rand_sink"),
                 ):
                     vals, t = [], 0.0
                     for i in range(n_rep):
                         sol, dt = timed(
-                            spar_sink_uot, jax.random.PRNGKey(i), C, a, b,
-                            lam, eps, float(s), tol=1e-9, max_iter=10_000, **kw,
+                            solve, problem, method=method,
+                            key=jax.random.PRNGKey(i), s=float(s),
+                            tol=1e-9, max_iter=10_000,
                         )
                         vals.append(float(sol.value))
                         t += dt
                     err = rmae(vals, truth)
-                    emit(f"fig3/{pattern}/{reg}/{method}/s{mult}x",
+                    emit(f"fig3/{pattern}/{reg}/{label}/s{mult}x",
                          t / n_rep * 1e6, f"rmae={err:.4f}")
                 # Nys-Sink at matched budget (expected to fail: near-full-rank K)
                 r = max(2, int(np.ceil(s / n)))
-                K = gibbs_kernel(C, eps)
-                fe = lam / (lam + eps)
                 vals, t = [], 0.0
                 for i in range(n_rep):
-                    (res, nk), dt = timed(nys_sink, jax.random.PRNGKey(i), K, a, b, r,
-                                          tol=1e-9, max_iter=10_000, fe=fe)
-                    T = res.u[:, None] * nk.dense() * res.v[None, :]
-                    vals.append(float(uot_cost_from_plan(T, C, a, b, lam, eps)))
+                    sol, dt = timed(solve, problem, method="nys_sink",
+                                    key=jax.random.PRNGKey(i), rank=r,
+                                    tol=1e-9, max_iter=10_000)
+                    vals.append(float(sol.value))
                     t += dt
                 err = rmae(vals, truth)
                 emit(f"fig3/{pattern}/{reg}/nys_sink/s{mult}x",

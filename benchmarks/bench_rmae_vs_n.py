@@ -1,51 +1,42 @@
 """Paper Fig. 4 (+ Figs. 9-10): RMAE vs sample size n at s = 8*s0(n) —
-asymptotic consistency (Thm 1/2), including Greenkhorn/Screenkhorn-lite."""
+asymptotic consistency (Thm 1/2), including Greenkhorn/Screenkhorn-lite.
+
+All solvers run through the unified ``solve(problem, method=...)`` registry.
+"""
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, log, ot_problem, rmae, timed
-from repro.core import (
-    gibbs_kernel,
-    greenkhorn,
-    ot_cost_from_plan,
-    plan_from_scalings,
-    s0,
-    screenkhorn_lite,
-    spar_sink_ot,
-    uniform_probs,
-)
+from repro.core import s0, solve
 
 
 def run(ns=(400, 800, 1600), d=5, eps=0.1, n_rep=6, pattern="C1",
         with_competitors=True):
     for n in ns:
-        a, b, C, truth = ot_problem(pattern, n, d, eps)
+        problem, truth = ot_problem(pattern, n, d, eps)
         s = 8 * s0(n)
-        for method, kw in (
-            ("spar_sink", {}),
-            ("rand_sink", {"probs": uniform_probs(n, n, C.dtype)}),
+        for label, method in (
+            ("spar_sink", "spar_sink_coo"),
+            ("rand_sink", "rand_sink"),
         ):
             vals, t = [], 0.0
             for i in range(n_rep):
-                sol, dt = timed(spar_sink_ot, jax.random.PRNGKey(i), C, a, b,
-                                eps, float(s), tol=1e-9, max_iter=10_000, **kw)
+                sol, dt = timed(solve, problem, method=method,
+                                key=jax.random.PRNGKey(i), s=float(s),
+                                tol=1e-9, max_iter=10_000)
                 vals.append(float(sol.value))
                 t += dt
             err = rmae(vals, truth)
-            emit(f"fig4/{pattern}/n{n}/{method}", t / n_rep * 1e6, f"rmae={err:.4f}")
+            emit(f"fig4/{pattern}/n{n}/{label}", t / n_rep * 1e6, f"rmae={err:.4f}")
         if with_competitors:
-            K = gibbs_kernel(C, eps)
-            res, t = timed(greenkhorn, K, a, b, n_updates=5 * n)
-            T = plan_from_scalings(res.u, K, res.v)
-            err = rmae([float(ot_cost_from_plan(T, C, eps))], truth)
+            sol, t = timed(solve, problem, method="greenkhorn", n_updates=5 * n)
+            err = rmae([float(sol.value)], truth)
             emit(f"fig4/{pattern}/n{n}/greenkhorn", t * 1e6, f"rmae={err:.4f}")
-            (res, rows, cols), t = timed(screenkhorn_lite, K, a, b, decimation=3)
-            T = plan_from_scalings(res.u, K, res.v)
-            err = rmae([float(ot_cost_from_plan(T, C, eps))], truth)
+            sol, t = timed(solve, problem, method="screenkhorn_lite", decimation=3)
+            err = rmae([float(sol.value)], truth)
             emit(f"fig4/{pattern}/n{n}/screenkhorn_lite", t * 1e6, f"rmae={err:.4f}")
         log(f"Fig4 n={n} done (truth={truth:.4f})")
 

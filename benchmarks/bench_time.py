@@ -12,9 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, log, timed
-from repro.core import gibbs_kernel, normalize_cost, s0, sinkhorn, squared_euclidean_cost
-from repro.core.sparsify import ot_sampling_probs, sparsify_coo, coo_matvec, coo_rmatvec
-from repro.core.spar_sink import default_cap
+from repro.core import Geometry, OTProblem, build_coo_sketch, s0
+from repro.core.sparsify import coo_matvec, coo_rmatvec
 from repro.data import make_measures
 
 
@@ -47,12 +46,12 @@ def run(ns=(800, 1600, 3200), d=5, eps=0.1):
     for n in ns:
         a, b, x = make_measures("C1", n, d, seed=0)
         a, b = jnp.asarray(a), jnp.asarray(b)
-        C, _ = normalize_cost(squared_euclidean_cost(jnp.asarray(x), jnp.asarray(x)))
-        K = gibbs_kernel(C, eps)
+        geom = Geometry.from_points(jnp.asarray(x)).normalized()
+        problem = OTProblem(geom, a, b, eps)
+        K = problem.kernel()
         td = _iter_time_dense(K, a, b)
         s = 8 * s0(n)
-        probs = ot_sampling_probs(a, b)
-        sk = sparsify_coo(jax.random.PRNGKey(0), K, probs, float(s), default_cap(s))
+        sk = build_coo_sketch(problem, jax.random.PRNGKey(0), float(s))
         ts = _iter_time_sparse(sk, a, b)
         dense_t.append(td)
         sparse_t.append(ts)

@@ -12,18 +12,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    gibbs_kernel,
-    plan_from_scalings,
-    s0,
-    sinkhorn,
-    spar_sink_ot,
-    squared_euclidean_cost,
-)
-from repro.core.sparsify import ot_sampling_probs, sparsify_coo
-from repro.core.spar_sink import default_cap
-from repro.core.sinkhorn import generic_scaling_loop
-from repro.core.sparsify import coo_matvec, coo_rmatvec
+from repro.core import Geometry, OTProblem, s0, solve
 
 
 def synth_image(kind: str, n: int, seed: int) -> np.ndarray:
@@ -45,24 +34,20 @@ def main():
     a = jnp.full((n,), 1.0 / n)
     b = jnp.full((n,), 1.0 / n)
     eps = 0.01
-    C = squared_euclidean_cost(x, y)
+    problem = OTProblem(Geometry.from_points(x, y), a, b, eps)
 
     # dense Sinkhorn plan
-    K = gibbs_kernel(C, eps)
     t0 = time.perf_counter()
-    res = sinkhorn(K, a, b, tol=1e-8, max_iter=5000)
-    T_dense = plan_from_scalings(res.u, K, res.v)
+    sol_dense = solve(problem, method="dense", tol=1e-8, max_iter=5000)
+    T_dense = sol_dense.plan()
     t_dense = time.perf_counter() - t0
 
-    # spar-sink plan (sketch + sparse iterations)
+    # spar-sink plan — stays a SparsePlan, the color map runs in O(cap)
     s = 8 * s0(n)
     t0 = time.perf_counter()
-    probs = ot_sampling_probs(a, b)
-    sk = sparsify_coo(jax.random.PRNGKey(0), K, probs, float(s), default_cap(s))
-    res_s = generic_scaling_loop(
-        lambda v: coo_matvec(sk, v), lambda u: coo_rmatvec(sk, u), a, b,
-        tol=1e-8, max_iter=5000,
-    )
+    sol_spar = solve(problem, method="spar_sink_coo", key=jax.random.PRNGKey(0),
+                     s=float(s), tol=1e-8, max_iter=5000)
+    plan = sol_spar.plan()
     t_spar = time.perf_counter() - t0
 
     # barycentric color map: x_i -> sum_j T_ij y_j / sum_j T_ij
@@ -72,11 +57,12 @@ def main():
         return np.asarray((w @ y) / denom)
 
     out_dense = transfer(T_dense)
-    T_spar = np.zeros((n, n))
-    te = np.asarray(res_s.u)[np.asarray(sk.rows)] * np.asarray(sk.vals) * \
-        np.asarray(res_s.v)[np.asarray(sk.cols)]
-    np.add.at(T_spar, (np.asarray(sk.rows), np.asarray(sk.cols)), te)
-    out_spar = transfer(jnp.asarray(T_spar))
+    # sparse barycentric map directly on the COO plan entries
+    numer = np.zeros((n, 3))
+    np.add.at(numer, np.asarray(plan.rows),
+              np.asarray(plan.vals)[:, None] * np.asarray(y)[np.asarray(plan.cols)])
+    denom = np.maximum(np.asarray(plan.row_marginal()), 1e-12)[:, None]
+    out_spar = numer / denom
 
     diff = np.abs(out_dense - out_spar).mean()
     print(f"sinkhorn: {t_dense:.2f}s   spar-sink: {t_spar:.2f}s "

@@ -13,7 +13,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import s0, spar_sink_uot, wfr_cost
+from repro.core import Geometry, UOTProblem, s0, solve
 from repro.data import synth_echo_video
 
 EPS, LAM, ETA = 0.01, 0.5, 0.1
@@ -31,17 +31,20 @@ def frame_measure(frame, stride=4):
 def wfr_matrix(video, key, stride=4):
     measures = [frame_measure(f, stride) for f in video]
     pts = measures[0][1]
-    C = wfr_cost(jnp.asarray(pts), eta=ETA)
+    # one shared Geometry: the WFR Gibbs kernel is materialized once for all
+    # frame pairs (the lazy per-eps cache), not once per pair
+    geom = Geometry.wfr(jnp.asarray(pts), eta=ETA)
     n = pts.shape[0]
     s = 8 * s0(n)
     t_frames = len(video)
     D = np.zeros((t_frames, t_frames))
     for i in range(t_frames):
         for j in range(i + 1, t_frames):
+            problem = UOTProblem(geom, measures[i][0], measures[j][0], EPS, lam=LAM)
             v = float(
-                spar_sink_uot(jax.random.fold_in(key, i * t_frames + j), C,
-                              measures[i][0], measures[j][0], LAM, EPS, s,
-                              tol=1e-7, max_iter=1500).value
+                solve(problem, method="spar_sink_coo",
+                      key=jax.random.fold_in(key, i * t_frames + j), s=s,
+                      tol=1e-7, max_iter=1500).value
             )
             D[i, j] = D[j, i] = max(v, 0.0) ** 0.5  # WFR = UOT^(1/2)
     return D

@@ -1,6 +1,26 @@
-"""Quickstart: approximate entropic OT and UOT distances with Spar-Sink.
+"""Quickstart: approximate entropic OT and UOT distances with Spar-Sink
+through the unified Geometry/Problem/Solver API.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The three core objects:
+
+* ``Geometry``   — ground cost; lazily materializes K = exp(-C/eps) per eps
+* ``OTProblem``/``UOTProblem`` — marginals + regularization on a Geometry
+* ``solve(problem, method=...)`` — one front end over every solver; returns
+  a ``Solution`` with ``.value``, ``.potentials``, ``.marginals()`` and a
+  lazy ``.plan()``
+
+Migration from the legacy free functions (still available as shims):
+
+    sinkhorn(K, a, b)                 -> solve(prob, method="dense")
+    sinkhorn_log(logK, a, b, eps)     -> solve(prob, method="log")
+    spar_sink_ot(key, C, a, b, e, s)  -> solve(prob, method="spar_sink_coo",
+                                              key=key, s=s)
+    spar_sink_ot(..., probs=uniform)  -> solve(prob, method="rand_sink", ...)
+    greenkhorn / nys_sink / screenkhorn_lite
+                                      -> solve(prob, method="greenkhorn" /
+                                               "nys_sink" / "screenkhorn_lite")
 """
 import jax
 
@@ -9,18 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    gibbs_kernel,
-    normalize_cost,
-    ot_cost_from_plan,
-    plan_from_scalings,
+    Geometry,
+    OTProblem,
+    UOTProblem,
+    available_methods,
     s0,
-    sinkhorn,
-    sinkhorn_uot,
-    spar_sink_ot,
-    spar_sink_uot,
-    squared_euclidean_cost,
-    uot_cost_from_plan,
-    wfr_cost,
+    solve,
 )
 
 
@@ -31,29 +45,41 @@ def main():
     a = jnp.asarray(rng.dirichlet(np.ones(n)))
     b = jnp.asarray(rng.dirichlet(np.ones(n)))
 
+    print("registered solvers:", ", ".join(available_methods()))
+
     # ---------------- OT ----------------
     eps = 0.02  # smaller eps => transport term dominates the entropic value
-    C, _ = normalize_cost(squared_euclidean_cost(x, x))
-    K = gibbs_kernel(C, eps)
-    res = sinkhorn(K, a, b, tol=1e-9, max_iter=10_000)
-    truth = float(ot_cost_from_plan(plan_from_scalings(res.u, K, res.v), C, eps))
-    print(f"entropic OT  (dense Sinkhorn, {int(res.n_iter)} iters): {truth:.6f}")
+    geom = Geometry.from_points(x, normalize=True)  # cost scaled to [0,1]
+    problem = OTProblem(geom, a, b, eps)
+
+    ref = solve(problem, method="dense", tol=1e-9, max_iter=10_000)
+    truth = float(ref.value)
+    print(f"entropic OT  (dense Sinkhorn, {int(ref.n_iter)} iters): {truth:.6f}")
 
     s = 8 * s0(n)  # paper's budget: s = 8 * 1e-3 * n * log^4 n  (~O(n))
-    sol = spar_sink_ot(jax.random.PRNGKey(0), C, a, b, eps, s)
+    sol = solve(problem, method="spar_sink_coo", key=jax.random.PRNGKey(0), s=s)
     print(f"entropic OT  (Spar-Sink, nnz={int(sol.nnz)}/{n*n}): "
           f"{float(sol.value):.6f}  (rel err {abs(sol.value-truth)/abs(truth):.3%})")
+
+    # The plan stays sparse — O(cap) memory — unless explicitly densified.
+    plan = sol.plan()
+    row, col = sol.marginals()
+    print(f"sparse plan: {type(plan).__name__} cap={plan.cap} "
+          f"mass={float(plan.total_mass()):.4f} "
+          f"marginal err row={float(jnp.abs(row - a).sum()):.2e} "
+          f"col={float(jnp.abs(col - b).sum()):.2e}")
 
     # ---------------- UOT / WFR ----------------
     a5, b3 = a * 5.0, b * 3.0  # unbalanced masses (paper Sec. 5.1)
     lam = 0.1
-    Cw = wfr_cost(x, eta=0.2)
-    Kw = gibbs_kernel(Cw, eps)
-    res = sinkhorn_uot(Kw, a5, b3, lam, eps, tol=1e-9, max_iter=10_000)
-    Tw = plan_from_scalings(res.u, Kw, res.v)
-    truth_u = float(uot_cost_from_plan(Tw, Cw, a5, b3, lam, eps))
+    wfr_geom = Geometry.wfr(x, eta=0.2)  # transport blocked beyond pi*eta
+    uot = UOTProblem(wfr_geom, a5, b3, eps, lam=lam)
+
+    ref_u = solve(uot, method="dense", tol=1e-9, max_iter=10_000)
+    truth_u = float(ref_u.value)
     print(f"entropic UOT (dense, WFR cost): {truth_u:.6f}")
-    sol = spar_sink_uot(jax.random.PRNGKey(1), Cw, a5, b3, lam, eps, s)
+
+    sol = solve(uot, method="spar_sink_coo", key=jax.random.PRNGKey(1), s=s)
     print(f"entropic UOT (Spar-Sink):       {float(sol.value):.6f}  "
           f"(rel err {abs(sol.value-truth_u)/abs(truth_u):.3%})")
 

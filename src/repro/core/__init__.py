@@ -1,4 +1,51 @@
-"""Spar-Sink core: the paper's contribution as a composable JAX library."""
+"""Spar-Sink core: the paper's contribution as a composable JAX library.
+
+The public surface is organized around three types plus one front end
+(see :mod:`repro.core.api`):
+
+* **Geometry** — wraps a ground cost (explicit matrix, point clouds, or a
+  WFR pixel grid) and lazily materializes/caches ``K = exp(-C/eps)`` and
+  ``log K`` per ``eps``;
+* **OTProblem / UOTProblem** — marginals + regularization bound to a
+  Geometry (``UOTProblem(lam=inf)`` degenerates to balanced OT, paper
+  Sec. 2.2);
+* **solve(problem, method=..., \\*\\*opts) -> Solution** — a string-keyed
+  solver registry (``available_methods()`` lists it: ``dense``, ``log``,
+  ``spar_sink_coo``, ``spar_sink_block_ell``, ``spar_sink_dense``,
+  ``rand_sink``, ``greenkhorn``, ``nys_sink``, ``screenkhorn_lite``).
+  Every solver returns a `Solution` with ``.value``, ``.potentials``,
+  ``.marginals()`` and a **lazy** ``.plan()`` that stays O(cap) for sparse
+  sketches and only densifies on explicit request.
+
+Migration from the legacy free functions (kept as deprecation shims):
+
+======================================== =====================================
+Legacy call                              New API
+======================================== =====================================
+``sinkhorn(K, a, b)``                    ``solve(OTProblem(Geometry(C), a, b,
+                                         eps), method="dense")``
+``sinkhorn_log(logK, a, b, eps)``        ``solve(..., method="log")``
+``sinkhorn_uot(K, a, b, lam, eps)``      ``solve(UOTProblem(Geometry(C), a, b,
+                                         eps, lam=lam), method="dense")``
+``spar_sink_ot(key, C, a, b, eps, s)``   ``solve(..., method="spar_sink_coo",
+                                         key=key, s=s)``
+``spar_sink_ot(method="block_ell")``     ``solve(...,
+                                         method="spar_sink_block_ell")``
+``spar_sink_ot(..., probs=uniform)``     ``solve(..., method="rand_sink")``
+``greenkhorn(K, a, b, n)``               ``solve(..., method="greenkhorn",
+                                         n_updates=n)``
+``nys_sink(key, K, a, b, r)``            ``solve(..., method="nys_sink",
+                                         key=key, rank=r)``
+``screenkhorn_lite(K, a, b)``            ``solve(..., method="screenkhorn_lite")``
+``spar_sink_divergence(key, ...)``       ``sinkhorn_divergence(...,
+                                         method="spar_sink_coo", key=key, s=s)``
+``spar_ibp(key, Ks, bs, w, s)``          ``solve_barycenter(geom, bs, w, eps,
+                                         method="spar_ibp", key=key, s=s)``
+======================================== =====================================
+
+The engine layer (``generic_scaling_loop``, sparsify representations, cost
+builders) remains importable for power users and the Pallas kernels.
+"""
 from repro.core.geometry import (
     euclidean_cost,
     gibbs_kernel,
@@ -25,6 +72,7 @@ from repro.core.sinkhorn import (
 from repro.core.spar_sink import (
     SparSinkSolution,
     default_cap,
+    default_max_blocks,
     s0,
     spar_sink_ot,
     spar_sink_uot,
@@ -34,14 +82,33 @@ from repro.core.sparsify import (
     uniform_probs,
     uot_sampling_probs,
 )
-from repro.core.barycenter import ibp, spar_ibp
+from repro.core.api import (
+    Geometry,
+    OTProblem,
+    Solution,
+    SparsePlan,
+    UOTProblem,
+    available_methods,
+    build_coo_sketch,
+    register_solver,
+    solve,
+)
+from repro.core.barycenter import ibp, solve_barycenter, spar_ibp
 from repro.core.baselines import greenkhorn, nys_sink, screenkhorn_lite
 from repro.core.divergence import sinkhorn_divergence, spar_sink_divergence
 
 __all__ = [
+    "Geometry",
+    "OTProblem",
     "SinkhornResult",
+    "Solution",
     "SparSinkSolution",
+    "SparsePlan",
+    "UOTProblem",
+    "available_methods",
+    "build_coo_sketch",
     "default_cap",
+    "default_max_blocks",
     "entropy",
     "euclidean_cost",
     "gibbs_kernel",
@@ -56,6 +123,7 @@ __all__ = [
     "ot_sampling_probs",
     "plan_from_potentials",
     "plan_from_scalings",
+    "register_solver",
     "s0",
     "screenkhorn_lite",
     "sinkhorn",
@@ -63,6 +131,8 @@ __all__ = [
     "sinkhorn_log",
     "sinkhorn_uot",
     "sinkhorn_uot_log",
+    "solve",
+    "solve_barycenter",
     "spar_ibp",
     "spar_sink_divergence",
     "spar_sink_ot",

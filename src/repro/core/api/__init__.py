@@ -1,0 +1,36 @@
+"""Unified Geometry/Problem/Solver API (see `repro.core` for the overview).
+
+    from repro.core import Geometry, OTProblem, solve
+
+    geom = Geometry.from_points(x)            # K/logK lazily cached per eps
+    sol = solve(OTProblem(geom, a, b, eps=0.1), method="spar_sink_coo",
+                key=jax.random.PRNGKey(0), s=8 * s0(n))
+    sol.value        # entropic objective estimate
+    sol.plan()       # SparsePlan — O(cap), never densified implicitly
+    sol.marginals()  # O(cap) row/col sums
+"""
+from repro.core.api.geometry import Geometry
+from repro.core.api.problems import OTProblem, UOTProblem
+from repro.core.api.registry import (
+    available_methods,
+    get_solver,
+    register_solver,
+    solve,
+)
+from repro.core.api.solution import SparsePlan, Solution
+from repro.core.api.solvers import build_coo_sketch, mix_uniform, sampling_probs
+
+__all__ = [
+    "Geometry",
+    "OTProblem",
+    "Solution",
+    "SparsePlan",
+    "UOTProblem",
+    "available_methods",
+    "build_coo_sketch",
+    "get_solver",
+    "mix_uniform",
+    "register_solver",
+    "sampling_probs",
+    "solve",
+]

@@ -1,0 +1,148 @@
+"""`Geometry`: the ground-cost object of the unified OT API.
+
+A `Geometry` wraps a cost matrix (given directly, built from point clouds,
+or built from a WFR pixel grid) and **lazily** materializes the Gibbs
+kernel ``K = exp(-C/eps)`` / ``log K = -C/eps`` per regularization ``eps``,
+caching each materialization so that consumers (solvers, divergences,
+benchmarks) stop exponentiating costs by hand and never build the same
+kernel twice.
+
+Blocked entries (``C = +inf``, e.g. beyond the WFR range ``pi * eta``)
+map to ``K = 0`` / ``log K = -inf`` exactly, matching
+:func:`repro.core.geometry.gibbs_kernel`.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import (
+    euclidean_cost,
+    gibbs_kernel,
+    grid_support_2d,
+    log_gibbs_kernel,
+    normalize_cost,
+    squared_euclidean_cost,
+    wfr_cost,
+)
+
+__all__ = ["Geometry"]
+
+_COST_FNS: dict[str, Callable[..., jax.Array]] = {
+    "sqeuclidean": squared_euclidean_cost,
+    "euclidean": euclidean_cost,
+}
+
+
+class Geometry:
+    """Ground cost + per-``eps`` lazy kernel cache.
+
+    Construct with one of:
+
+    * ``Geometry(C)`` / ``Geometry.from_cost(C)`` — explicit cost matrix;
+    * ``Geometry.from_points(x, y, cost="sqeuclidean")`` — point clouds;
+    * ``Geometry.wfr(x, y, eta=...)`` — Wasserstein-Fisher-Rao cost
+      (paper Sec. 2.2; blocked beyond range ``pi * eta``);
+    * ``Geometry.from_grid(h, w, eta=...)`` — WFR cost on a pixel grid
+      in ``[0,1]^2`` (the echocardiography setting, paper Sec. 6).
+    """
+
+    def __init__(self, cost: jax.Array, *, scale: jax.Array | float = 1.0):
+        self.cost = jnp.asarray(cost)
+        self.scale = scale  # cost units per stored unit (see normalized())
+        self._kernels: dict[float, jax.Array] = {}
+        self._log_kernels: dict[float, jax.Array] = {}
+
+    # ---------------------------------------------------------------- ctors
+
+    @classmethod
+    def from_cost(cls, cost: jax.Array) -> "Geometry":
+        return cls(cost)
+
+    @classmethod
+    def from_points(
+        cls,
+        x: jax.Array,
+        y: jax.Array | None = None,
+        *,
+        cost: str = "sqeuclidean",
+        normalize: bool = False,
+    ) -> "Geometry":
+        try:
+            cost_fn = _COST_FNS[cost]
+        except KeyError:
+            raise KeyError(
+                f"unknown cost {cost!r}; available: {', '.join(sorted(_COST_FNS))}"
+            ) from None
+        geom = cls(cost_fn(jnp.asarray(x), None if y is None else jnp.asarray(y)))
+        return geom.normalized() if normalize else geom
+
+    @classmethod
+    def wfr(
+        cls,
+        x: jax.Array,
+        y: jax.Array | None = None,
+        *,
+        eta: float = 1.0,
+        d: jax.Array | None = None,
+    ) -> "Geometry":
+        return cls(wfr_cost(x, y, eta=eta, d=d))
+
+    @classmethod
+    def from_grid(
+        cls, h: int, w: int, *, eta: float | None = None, dtype=jnp.float64
+    ) -> "Geometry":
+        pts = grid_support_2d(h, w, dtype=dtype)
+        if eta is None:
+            return cls(squared_euclidean_cost(pts, pts))
+        return cls(wfr_cost(pts, eta=eta))
+
+    # ---------------------------------------------------------------- views
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.cost.shape[0], self.cost.shape[1])
+
+    @property
+    def dtype(self):
+        return self.cost.dtype
+
+    def normalized(self) -> "Geometry":
+        """New `Geometry` with the finite cost scaled to ``[0, 1]`` so ``eps``
+        grids are comparable across data patterns (paper Sec. 5.1)."""
+        c, scale = normalize_cost(self.cost)
+        return Geometry(c, scale=scale)
+
+    # ---------------------------------------------------------------- lazy kernels
+    #
+    # The cache holds one n x m array per (eps, representation) requested and
+    # is never evicted automatically: anything referencing this Geometry
+    # (problems, Solutions via `solution.problem.geom`) keeps every cached
+    # kernel reachable. Sweeping many eps values on one long-lived Geometry?
+    # Call `clear_cache()` between sweep points to bound memory.
+
+    def clear_cache(self) -> None:
+        """Drop all cached kernels (they rebuild lazily on next access)."""
+        self._kernels.clear()
+        self._log_kernels.clear()
+
+    def kernel(self, eps: float) -> jax.Array:
+        """``K = exp(-C/eps)``, materialized once per ``eps`` and cached."""
+        key = float(eps)
+        if key not in self._kernels:
+            self._kernels[key] = gibbs_kernel(self.cost, eps)
+        return self._kernels[key]
+
+    def log_kernel(self, eps: float) -> jax.Array:
+        """``log K = -C/eps`` (``-inf`` where blocked), cached per ``eps``."""
+        key = float(eps)
+        if key not in self._log_kernels:
+            self._log_kernels[key] = log_gibbs_kernel(self.cost, eps)
+        return self._log_kernels[key]
+
+    def __repr__(self) -> str:
+        n, m = self.shape
+        cached = sorted(set(self._kernels) | set(self._log_kernels))
+        return f"Geometry({n}x{m}, cached_eps={cached})"

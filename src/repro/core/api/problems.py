@@ -1,0 +1,86 @@
+"""Problem objects: marginals + regularization bound to a `Geometry`.
+
+`OTProblem` is balanced entropic OT (paper eq. 6); `UOTProblem` is
+unbalanced entropic OT with marginal-KL penalty ``lam`` (paper eq. 10).
+``UOTProblem(lam=inf)`` degenerates exactly to the balanced problem
+(``fe = lam/(lam+eps) -> 1``, the KL terms pin the marginals — paper
+Sec. 2.2), and every registered solver honors that degeneration.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api.geometry import Geometry
+from repro.core.sinkhorn import ot_cost_from_plan, uot_cost_from_plan
+
+__all__ = ["OTProblem", "UOTProblem"]
+
+
+def _as_geometry(geom) -> Geometry:
+    return geom if isinstance(geom, Geometry) else Geometry(jnp.asarray(geom))
+
+
+@dataclass(eq=False)  # array fields: generated __eq__ would raise, not compare
+class OTProblem:
+    """Balanced entropic OT: ``min <T,C> - eps H(T)`` s.t. exact marginals."""
+
+    geom: Geometry
+    a: jax.Array
+    b: jax.Array
+    eps: float
+
+    def __post_init__(self):
+        self.geom = _as_geometry(self.geom)
+        self.a = jnp.asarray(self.a)
+        self.b = jnp.asarray(self.b)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.a.shape[0], self.b.shape[0])
+
+    @property
+    def is_balanced(self) -> bool:
+        return True
+
+    @property
+    def fe(self) -> float:
+        """Scaling-update exponent (``1`` for balanced OT)."""
+        return 1.0
+
+    def kernel(self) -> jax.Array:
+        return self.geom.kernel(self.eps)
+
+    def log_kernel(self) -> jax.Array:
+        return self.geom.log_kernel(self.eps)
+
+    def objective(self, plan: jax.Array) -> jax.Array:
+        """Primal entropic objective of a dense plan (paper eq. 6)."""
+        return ot_cost_from_plan(plan, self.geom.cost, self.eps)
+
+
+@dataclass(eq=False)
+class UOTProblem(OTProblem):
+    """Unbalanced entropic OT with marginal penalty ``lam`` (paper eq. 10)."""
+
+    lam: float = field(default=1.0)
+
+    @property
+    def is_balanced(self) -> bool:
+        return math.isinf(self.lam)
+
+    @property
+    def fe(self) -> float:
+        if math.isinf(self.lam):
+            return 1.0
+        return self.lam / (self.lam + self.eps)
+
+    def objective(self, plan: jax.Array) -> jax.Array:
+        if self.is_balanced:  # lam = inf: KL terms vanish at feasibility
+            return ot_cost_from_plan(plan, self.geom.cost, self.eps)
+        return uot_cost_from_plan(
+            plan, self.geom.cost, self.a, self.b, self.lam, self.eps
+        )

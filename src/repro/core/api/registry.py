@@ -1,0 +1,107 @@
+"""String-keyed solver registry behind `solve()`.
+
+One front end replaces the four copies of the dense/coo/block_ell dispatch
+if-chain that used to live in ``spar_sink_ot``/``spar_sink_uot`` and the
+benchmark drivers. A solver is a callable
+
+    solver(problem, *, key=None, **opts) -> Solution
+
+registered under a string name with :func:`register_solver`. Unknown names
+raise ``KeyError`` listing what *is* available, so typos fail loudly.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Callable
+
+from repro.core.api.problems import OTProblem
+from repro.core.api.solution import Solution
+
+__all__ = [
+    "register_solver",
+    "available_methods",
+    "get_solver",
+    "method_accepts",
+    "solve",
+]
+
+SolverFn = Callable[..., Solution]
+
+_REGISTRY: dict[str, SolverFn] = {}
+
+
+def register_solver(name: str) -> Callable[[SolverFn], SolverFn]:
+    """Decorator: register ``fn`` as ``solve(..., method=name)``."""
+
+    def deco(fn: SolverFn) -> SolverFn:
+        if name in _REGISTRY:
+            raise ValueError(f"solver {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_builtin_solvers() -> None:
+    # Importing the module runs its register_solver decorators; lazy so that
+    # `from repro.core.api.registry import solve` alone still works.
+    from repro.core.api import solvers  # noqa: F401
+
+
+def available_methods() -> list[str]:
+    _ensure_builtin_solvers()
+    return sorted(_REGISTRY)
+
+
+def get_solver(method: str) -> SolverFn:
+    _ensure_builtin_solvers()
+    try:
+        return _REGISTRY[method]
+    except KeyError:
+        raise KeyError(
+            f"unknown solver method {method!r}; available: "
+            f"{', '.join(sorted(_REGISTRY))}"
+        ) from None
+
+
+def _option_names(fn: SolverFn) -> list[str]:
+    params = inspect.signature(fn).parameters
+    return [n for n in params if n != "problem"]
+
+
+def method_accepts(method: str, option: str) -> bool:
+    """Whether a registered method's solver takes ``option`` as a keyword."""
+    fn = get_solver(method)
+    params = inspect.signature(fn).parameters
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return True
+    return option in params
+
+
+def solve(problem: OTProblem, method: str = "dense", **opts) -> Solution:
+    """Solve an `OTProblem`/`UOTProblem` with a registered method.
+
+    Common options: ``tol``, ``max_iter``. Sketching methods additionally
+    take ``key`` (PRNG) and ``s`` (expected sketch size); see each solver's
+    docstring in :mod:`repro.core.api.solvers`.
+    """
+    fn = get_solver(method)
+    params = inspect.signature(fn).parameters
+    if not any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        invalid = sorted(set(opts) - set(params))
+        if invalid:
+            raise TypeError(
+                f"method {method!r} got unexpected option(s) {invalid}; "
+                f"valid options: {_option_names(fn)}"
+            )
+        missing = sorted(
+            n for n, p in params.items()
+            if n != "problem" and p.default is inspect.Parameter.empty
+            and n not in opts
+        )
+        if missing:
+            raise TypeError(
+                f"method {method!r} requires option(s) {missing}; "
+                f"valid options: {_option_names(fn)}"
+            )
+    return fn(problem, **opts)

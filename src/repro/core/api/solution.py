@@ -1,0 +1,151 @@
+"""`Solution`: the uniform return type of `solve()`.
+
+Every registered solver — dense, log-domain, Spar-Sink COO/block-ELL,
+Rand-Sink, Greenkhorn, Nys-Sink, Screenkhorn-lite — returns one of these.
+Uniform accessors:
+
+* ``.value``        — entropic objective estimate (OT_eps / UOT_{lam,eps});
+                      never triggers a plan materialization
+* ``.potentials``   — dual potentials ``(f, g)`` (converted from scalings
+                      when the solver ran in the scaling domain)
+* ``.scalings``     — scaling vectors ``(u, v)`` where meaningful
+* ``.marginals()``  — row/col marginals of the plan; O(cap) on COO-sketch
+                      solves (``spar_sink_coo``/``rand_sink``)
+* ``.plan()``       — **lazy**: a `SparsePlan` (COO, O(cap) memory) for
+                      COO-sketch solves — there, ``plan(dense=True)`` is the
+                      only way an n x m array gets materialized. Every other
+                      solver has an inherently dense plan: it is built on
+                      first ``plan()``/``marginals()`` access and cached on
+                      the Solution (so a Solution used only for ``.value``
+                      stays small even for ``nys_sink``/``block_ell``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sinkhorn import SinkhornResult
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.api.problems import OTProblem
+
+__all__ = ["SparsePlan", "Solution"]
+
+
+class SparsePlan(NamedTuple):
+    """Transport plan restricted to the sampled sketch entries (padded COO).
+
+    Entries beyond ``nnz`` are zero-valued padding at ``(0, 0)``; all
+    reductions below remain exact because padded ``vals`` are 0.
+    """
+
+    rows: jax.Array  # (cap,) int32
+    cols: jax.Array  # (cap,) int32
+    vals: jax.Array  # (cap,) plan mass per kept entry
+    nnz: jax.Array  # () int32
+    n: int
+    m: int
+
+    @property
+    def cap(self) -> int:
+        return self.rows.shape[0]
+
+    def row_marginal(self) -> jax.Array:
+        """``T~ 1`` in O(cap)."""
+        return jax.ops.segment_sum(self.vals, self.rows, num_segments=self.n)
+
+    def col_marginal(self) -> jax.Array:
+        """``T~^T 1`` in O(cap)."""
+        return jax.ops.segment_sum(self.vals, self.cols, num_segments=self.m)
+
+    def total_mass(self) -> jax.Array:
+        return jnp.sum(self.vals)
+
+    def todense(self) -> jax.Array:
+        """Explicit n x m materialization (the only densifying operation)."""
+        dense = jnp.zeros((self.n, self.m), self.vals.dtype)
+        return dense.at[self.rows, self.cols].add(self.vals)
+
+
+@dataclass(eq=False)  # array fields: generated __eq__ would raise, not compare
+class Solution:
+    """Uniform solver output; see module docstring for the accessor contract."""
+
+    method: str
+    problem: "OTProblem"
+    value: jax.Array
+    result: SinkhornResult  # raw u/v scalings, or f/g potentials in log domain
+    domain: str = "scaling"  # "scaling" | "log"
+    nnz: jax.Array | None = None  # realized sketch size (sparse solvers)
+    _plan_thunk: Callable[[], "SparsePlan | jax.Array"] | None = field(
+        default=None, repr=False
+    )
+    _plan_cache: "SparsePlan | jax.Array | None" = field(
+        default=None, repr=False, init=False
+    )
+
+    # ------------------------------------------------------------ potentials
+
+    @property
+    def scalings(self) -> tuple[jax.Array, jax.Array]:
+        """``(u, v)`` with ``T = diag(u) K diag(v)``."""
+        if self.domain == "log":
+            eps = self.problem.eps
+            return jnp.exp(self.result.u / eps), jnp.exp(self.result.v / eps)
+        return self.result.u, self.result.v
+
+    @property
+    def potentials(self) -> tuple[jax.Array, jax.Array]:
+        """Dual potentials ``(f, g) = eps log (u, v)`` (``-inf`` on dead atoms)."""
+        if self.domain == "log":
+            return self.result.u, self.result.v
+        eps = self.problem.eps
+        u, v = self.result.u, self.result.v
+        f = jnp.where(u > 0, eps * jnp.log(jnp.where(u > 0, u, 1.0)), -jnp.inf)
+        g = jnp.where(v > 0, eps * jnp.log(jnp.where(v > 0, v, 1.0)), -jnp.inf)
+        return f, g
+
+    def block_until_ready(self) -> "Solution":
+        """Block on the eager arrays (value + scalings) — lets
+        ``jax.block_until_ready(solution)`` work for benchmark timing even
+        though `Solution` is not a pytree."""
+        jax.block_until_ready((self.value, self.result))
+        return self
+
+    @property
+    def n_iter(self) -> jax.Array:
+        return self.result.n_iter
+
+    @property
+    def err(self) -> jax.Array:
+        return self.result.err
+
+    # ------------------------------------------------------------------ plan
+
+    def plan(self, dense: bool = False) -> "SparsePlan | jax.Array":
+        """Lazy transport plan.
+
+        COO-sketch solves return a `SparsePlan` holding only the O(cap)
+        sampled entries; pass ``dense=True`` to force the n x m array.
+        All other solvers return the n x m array either way — built on
+        first access and cached on the Solution for its lifetime.
+        """
+        if self._plan_cache is None:
+            if self._plan_thunk is None:
+                raise ValueError(f"solver {self.method!r} produced no plan")
+            self._plan_cache = self._plan_thunk()
+        p = self._plan_cache
+        if dense and isinstance(p, SparsePlan):
+            return p.todense()
+        return p
+
+    def marginals(self) -> tuple[jax.Array, jax.Array]:
+        """``(T 1, T^T 1)`` — O(cap) and densification-free on COO-sketch
+        solves; other solvers go through their (cached) dense plan."""
+        p = self.plan()
+        if isinstance(p, SparsePlan):
+            return p.row_marginal(), p.col_marginal()
+        return jnp.sum(p, axis=1), jnp.sum(p, axis=0)

@@ -1,0 +1,398 @@
+"""The built-in solver registry entries behind ``solve(problem, method=...)``.
+
+Nine methods, one `Solution` contract:
+
+===================== ========================================================
+``dense``             Algorithm 1/2 on the dense Gibbs kernel (scaling domain)
+``log``               log-domain Algorithm 1/2 (small-``eps`` safe)
+``spar_sink_coo``     paper Algorithms 3/4 — importance sketch, padded COO,
+                      O(s) per iteration and O(cap) plan
+``spar_sink_block_ell`` tile-granular TPU sketch (DESIGN §3)
+``spar_sink_dense``   exact eq.(7) sketch as a dense masked array (reference)
+``rand_sink``         Spar-Sink with uniform probabilities (baseline)
+``greenkhorn``        greedy single-row/col updates (Altschuler et al. 2017)
+``nys_sink``          Nyström low-rank kernel + Sinkhorn (Altschuler 2019)
+``screenkhorn_lite``  static active-set screening (simplified Alaya 2019)
+===================== ========================================================
+
+Every solver accepts both `OTProblem` and `UOTProblem`; the unbalanced
+exponent ``fe = lam/(lam+eps)`` comes from the problem object, and
+``lam = inf`` degenerates each method to its balanced form.
+
+The sketching solvers here are **the** implementation — the legacy
+``spar_sink_ot``/``spar_sink_uot`` free functions are deprecation shims
+over this module, so results agree bitwise for a given PRNG key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsify
+from repro.core.api.problems import OTProblem, UOTProblem
+from repro.core.api.registry import register_solver
+from repro.core.api.solution import SparsePlan, Solution
+from repro.core.baselines import greenkhorn, nys_sink, screenkhorn_lite
+from repro.core.sinkhorn import (
+    generic_scaling_loop,
+    plan_from_potentials,
+    plan_from_scalings,
+    sinkhorn,
+    sinkhorn_log,
+    sinkhorn_uot,
+    sinkhorn_uot_log,
+)
+from repro.core.spar_sink import (
+    coo_objective_ot,
+    coo_objective_uot,
+    default_cap,
+    default_max_blocks,
+)
+
+__all__ = ["build_coo_sketch", "mix_uniform", "sampling_probs"]
+
+
+# --------------------------------------------------------------------------
+# Shared sketching helpers (used by the registry and the benchmarks)
+# --------------------------------------------------------------------------
+
+
+def mix_uniform(probs: jax.Array, shrinkage: float) -> jax.Array:
+    """Thm 1 condition (ii): keep ``p*_ij >= c3 s / n^2`` by uniform mixing."""
+    if shrinkage <= 0.0:
+        return probs
+    n, m = probs.shape
+    return (1.0 - shrinkage) * probs + shrinkage / (n * m)
+
+
+def sampling_probs(problem: OTProblem) -> jax.Array:
+    """Paper eq. (9) for OT, eq. (11) for UOT (degenerates to (9) at lam=inf)."""
+    if isinstance(problem, UOTProblem) and not problem.is_balanced:
+        return sparsify.uot_sampling_probs(
+            problem.a, problem.b, problem.log_kernel(), problem.lam, problem.eps
+        )
+    return sparsify.ot_sampling_probs(problem.a, problem.b)
+
+
+def _resolve_probs(
+    problem: OTProblem, probs: jax.Array | None, shrinkage: float
+) -> jax.Array:
+    """One place for the Thm-1 probability rule shared by every sketch path:
+    explicit override, else eq.(9)/(11) by problem type, then uniform mixing."""
+    return mix_uniform(probs if probs is not None else sampling_probs(problem), shrinkage)
+
+
+def build_coo_sketch(
+    problem: OTProblem,
+    key: jax.Array,
+    s: float,
+    *,
+    cap: int | None = None,
+    probs: jax.Array | None = None,
+    shrinkage: float = 0.0,
+) -> sparsify.SparseKernelCOO:
+    """Importance-sparsified COO sketch of the problem's Gibbs kernel."""
+    probs = _resolve_probs(problem, probs, shrinkage)
+    cap = default_cap(s) if cap is None else cap
+    return sparsify.sparsify_coo(key, problem.kernel(), probs, s, cap)
+
+
+def _coo_value(problem: OTProblem, sk, res) -> jax.Array:
+    """O(cap) entropic objective on the sketch plan."""
+    if isinstance(problem, UOTProblem) and not problem.is_balanced:
+        return coo_objective_uot(
+            sk, problem.geom.cost, res, problem.a, problem.b, problem.lam, problem.eps
+        )
+    return coo_objective_ot(sk, problem.geom.cost, res, problem.eps)
+
+
+def _dense_solution(problem: OTProblem, method: str, res, Kt: jax.Array, *, nnz=None) -> Solution:
+    """Assemble a `Solution` whose plan is a dense ``diag(u) Kt diag(v)``.
+
+    The plan array is *recomputed* by the lazy thunk rather than captured:
+    a long-lived Solution then pins only ``Kt`` (for the dense/greenkhorn/
+    screenkhorn paths that is the Geometry-cached kernel, already alive),
+    not a second n x m array."""
+    T = plan_from_scalings(res.u, Kt, res.v)
+    value = problem.objective(T)
+    del T
+    return Solution(
+        method=method,
+        problem=problem,
+        value=value,
+        result=res,
+        domain="scaling",
+        nnz=nnz,
+        _plan_thunk=lambda: plan_from_scalings(res.u, Kt, res.v),
+    )
+
+
+# --------------------------------------------------------------------------
+# Dense-kernel solvers
+# --------------------------------------------------------------------------
+
+
+@register_solver("dense")
+def _solve_dense(problem: OTProblem, *, tol: float = 1e-6, max_iter: int = 1000) -> Solution:
+    """Scaling-domain Sinkhorn on the dense Gibbs kernel (Alg. 1 / Alg. 2)."""
+    K = problem.kernel()
+    if problem.fe == 1.0:
+        res = sinkhorn(K, problem.a, problem.b, tol=tol, max_iter=max_iter)
+    else:
+        res = sinkhorn_uot(
+            K, problem.a, problem.b, problem.lam, problem.eps, tol=tol, max_iter=max_iter
+        )
+    return _dense_solution(problem, "dense", res, K)
+
+
+@register_solver("log")
+def _solve_log(problem: OTProblem, *, tol: float = 1e-9, max_iter: int = 1000) -> Solution:
+    """Log-domain Sinkhorn on dual potentials (survives ``eps`` down to 1e-3)."""
+    logK = problem.log_kernel()
+    eps = float(problem.eps)
+    if problem.fe == 1.0:
+        res = sinkhorn_log(logK, problem.a, problem.b, eps, tol=tol, max_iter=max_iter)
+    else:
+        res = sinkhorn_uot_log(
+            logK, problem.a, problem.b, float(problem.lam), eps, tol=tol, max_iter=max_iter
+        )
+    T = plan_from_potentials(res.u, logK, res.v, eps)
+    value = problem.objective(T)
+    del T
+    return Solution(
+        method="log",
+        problem=problem,
+        value=value,
+        result=res,
+        domain="log",
+        _plan_thunk=lambda: plan_from_potentials(res.u, logK, res.v, eps),
+    )
+
+
+# --------------------------------------------------------------------------
+# Sketching solvers (paper Algorithms 3 & 4 + baselines)
+# --------------------------------------------------------------------------
+
+
+@register_solver("spar_sink_coo")
+def _solve_spar_sink_coo(
+    problem: OTProblem,
+    *,
+    key: jax.Array,
+    s: float,
+    cap: int | None = None,
+    shrinkage: float = 0.0,
+    probs: jax.Array | None = None,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> Solution:
+    """Spar-Sink on the padded-COO sketch: O(s) iterations, O(cap) plan."""
+    sk = build_coo_sketch(problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage)
+    res = generic_scaling_loop(
+        lambda v: sparsify.coo_matvec(sk, v),
+        lambda u: sparsify.coo_rmatvec(sk, u),
+        problem.a,
+        problem.b,
+        problem.fe,
+        tol=tol,
+        max_iter=max_iter,
+    )
+
+    def sparse_plan() -> SparsePlan:
+        # T~ restricted to kept entries; padded slots carry vals == 0.
+        return SparsePlan(
+            sk.rows, sk.cols, res.u[sk.rows] * sk.vals * res.v[sk.cols], sk.nnz, sk.n, sk.m
+        )
+
+    return Solution(
+        method="spar_sink_coo",
+        problem=problem,
+        value=_coo_value(problem, sk, res),
+        result=res,
+        domain="scaling",
+        nnz=sk.nnz,
+        _plan_thunk=sparse_plan,
+    )
+
+
+@register_solver("rand_sink")
+def _solve_rand_sink(
+    problem: OTProblem,
+    *,
+    key: jax.Array,
+    s: float,
+    cap: int | None = None,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> Solution:
+    """Spar-Sink with uniform probabilities (the paper's Rand-Sink baseline)."""
+    n, m = problem.shape
+    sol = _solve_spar_sink_coo(
+        problem,
+        key=key,
+        s=s,
+        cap=cap,
+        probs=sparsify.uniform_probs(n, m, problem.geom.dtype),
+        tol=tol,
+        max_iter=max_iter,
+    )
+    sol.method = "rand_sink"
+    return sol
+
+
+@register_solver("spar_sink_dense")
+def _solve_spar_sink_dense(
+    problem: OTProblem,
+    *,
+    key: jax.Array,
+    s: float,
+    shrinkage: float = 0.0,
+    probs: jax.Array | None = None,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> Solution:
+    """Exact eq.(7) sketch held as a dense masked array (O(n^2) reference)."""
+    K = problem.kernel()
+    probs = _resolve_probs(problem, probs, shrinkage)
+    Kt = sparsify.sparsify_dense(key, K, probs, s)
+    res = generic_scaling_loop(
+        lambda v: Kt @ v,
+        lambda u: Kt.T @ u,
+        problem.a,
+        problem.b,
+        problem.fe,
+        tol=tol,
+        max_iter=max_iter,
+    )
+    return _dense_solution(problem, "spar_sink_dense", res, Kt, nnz=jnp.sum(Kt > 0))
+
+
+@register_solver("spar_sink_block_ell")
+def _solve_spar_sink_block_ell(
+    problem: OTProblem,
+    *,
+    key: jax.Array,
+    s: float,
+    block: int = 128,
+    max_blocks: int | None = None,
+    shrinkage: float = 0.0,
+    probs: jax.Array | None = None,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> Solution:
+    """Tile-granular sketch in block-ELL layout (dense MXU work per tile)."""
+    K = problem.kernel()
+    probs = _resolve_probs(problem, probs, shrinkage)
+    tile_p = sparsify.tile_probs_from_elem(probs, block)
+    n = problem.a.shape[0]
+    if max_blocks is None:
+        max_blocks = default_max_blocks(n, s, block)
+    sk = sparsify.sparsify_block_ell(key, K, tile_p, s, block, max_blocks)
+    res = generic_scaling_loop(
+        lambda v: sparsify.block_ell_matvec(sk, v),
+        lambda u: sparsify.block_ell_rmatvec(sk, u),
+        problem.a,
+        problem.b,
+        problem.fe,
+        tol=tol,
+        max_iter=max_iter,
+    )
+    # Transient densification for the objective (legacy behavior); the
+    # Solution itself retains only the O(s*Bk) block-ELL tiles.
+    Kt = sparsify.block_ell_to_dense(sk)
+    T = plan_from_scalings(res.u, Kt, res.v)
+    value = problem.objective(T)
+    nnz = jnp.sum(Kt > 0)
+    del T, Kt
+    return Solution(
+        method="spar_sink_block_ell",
+        problem=problem,
+        value=value,
+        result=res,
+        domain="scaling",
+        nnz=nnz,
+        _plan_thunk=lambda: plan_from_scalings(
+            res.u, sparsify.block_ell_to_dense(sk), res.v
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# Competitor solvers (paper Section 5 baselines)
+# --------------------------------------------------------------------------
+
+
+@register_solver("greenkhorn")
+def _solve_greenkhorn(
+    problem: OTProblem, *, n_updates: int | None = None
+) -> Solution:
+    """Greedy single-coordinate scalings; ``n_updates`` defaults to 5(n+m)."""
+    n, m = problem.shape
+    if n_updates is None:
+        n_updates = 5 * (n + m)
+    res = greenkhorn(
+        # fe is a static (hashable) jit argument in greenkhorn
+        problem.kernel(), problem.a, problem.b, n_updates, fe=float(problem.fe)
+    )
+    return _dense_solution(problem, "greenkhorn", res, problem.kernel())
+
+
+@register_solver("nys_sink")
+def _solve_nys_sink(
+    problem: OTProblem,
+    *,
+    key: jax.Array,
+    rank: int | None = None,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> Solution:
+    """Nyström low-rank kernel + Sinkhorn. Needs near-PSD K (fails on WFR)."""
+    n, m = problem.shape
+    if rank is None:
+        rank = max(2, min(n, m) // 20)
+    res, nk = nys_sink(
+        key,
+        problem.kernel(),
+        problem.a,
+        problem.b,
+        rank,
+        tol=tol,
+        max_iter=max_iter,
+        fe=problem.fe,
+    )
+    # Evaluate the objective on a transient dense plan; the Solution keeps
+    # only the O(nr) factors until .plan()/.marginals() is first accessed
+    # (which re-densifies and caches, per the Solution contract).
+    T = plan_from_scalings(res.u, nk.dense(), res.v)
+    value = problem.objective(T)
+    del T
+    return Solution(
+        method="nys_sink",
+        problem=problem,
+        value=value,
+        result=res,
+        domain="scaling",
+        _plan_thunk=lambda: plan_from_scalings(res.u, nk.dense(), res.v),
+    )
+
+
+@register_solver("screenkhorn_lite")
+def _solve_screenkhorn_lite(
+    problem: OTProblem,
+    *,
+    decimation: int = 3,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> Solution:
+    """Static active-set screening; screened-out atoms keep zero scalings."""
+    res, _, _ = screenkhorn_lite(
+        problem.kernel(),
+        problem.a,
+        problem.b,
+        decimation=decimation,
+        tol=tol,
+        max_iter=max_iter,
+        fe=problem.fe,
+        renormalize=problem.is_balanced,
+    )
+    return _dense_solution(problem, "screenkhorn_lite", res, problem.kernel())

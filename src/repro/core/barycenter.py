@@ -19,7 +19,13 @@ import jax.numpy as jnp
 
 from repro.core import sparsify
 
-__all__ = ["IBPResult", "ibp", "spar_ibp", "barycenter_sampling_probs"]
+__all__ = [
+    "IBPResult",
+    "ibp",
+    "spar_ibp",
+    "solve_barycenter",
+    "barycenter_sampling_probs",
+]
 
 
 class IBPResult(NamedTuple):
@@ -66,18 +72,28 @@ def _ibp_loop(matvec, rmatvec, bs, w, n, *, tol, max_iter, dtype):
 
 @partial(jax.jit, static_argnames=("tol", "max_iter"))
 def ibp(
-    Ks: jax.Array,  # (m, n, n)
+    Ks: jax.Array,  # (m, n, n) stacked, or (n, n) shared across measures
     bs: jax.Array,  # (m, n)
     w: jax.Array,  # (m,)
     *,
     tol: float = 1e-6,
     max_iter: int = 1000,
 ) -> IBPResult:
-    """Algorithm 5 — IBP({K_k}, {b_k}, w, tol)."""
+    """Algorithm 5 — IBP({K_k}, {b_k}, w, tol).
+
+    A 2-D ``Ks`` is treated as one kernel shared by all ``m`` measures
+    (the fixed-support case) and is never replicated to ``(m, n, n)``.
+    """
     n = Ks.shape[-1]
+    if Ks.ndim == 2:
+        matvec = lambda v: v @ Ks.T  # (m,n) @ K^T == stack of K v_k
+        rmatvec = lambda u: u @ Ks
+    else:
+        matvec = lambda v: jnp.einsum("kij,kj->ki", Ks, v)
+        rmatvec = lambda u: jnp.einsum("kij,ki->kj", Ks, u)
     return _ibp_loop(
-        lambda v: jnp.einsum("kij,kj->ki", Ks, v),
-        lambda u: jnp.einsum("kij,ki->kj", Ks, u),
+        matvec,
+        rmatvec,
         bs,
         w,
         n,
@@ -97,7 +113,7 @@ def barycenter_sampling_probs(bs: jax.Array) -> jax.Array:
 
 def spar_ibp(
     key: jax.Array,
-    Ks: jax.Array,  # (m, n, n)
+    Ks: jax.Array,  # (m, n, n) stacked, or (n, n) shared across measures
     bs: jax.Array,  # (m, n)
     w: jax.Array,
     s: float,
@@ -106,14 +122,19 @@ def spar_ibp(
     tol: float = 1e-6,
     max_iter: int = 1000,
 ) -> tuple[IBPResult, jax.Array]:
-    """Algorithm 6 — Spar-IBP. Returns (result, stacked nnz)."""
+    """Algorithm 6 — Spar-IBP. Returns (result, stacked nnz).
+
+    A 2-D ``Ks`` is one kernel shared by all measures (each still gets its
+    own independently sampled sketch via its own PRNG key).
+    """
     from repro.core.spar_sink import default_cap
 
-    m, n, _ = Ks.shape
+    m, n = bs.shape
     cap = default_cap(s) if cap is None else cap
     probs = barycenter_sampling_probs(bs)
     keys = jax.random.split(key, m)
-    sks = [sparsify.sparsify_coo(keys[k], Ks[k], probs[k], s, cap) for k in range(m)]
+    kernel_k = (lambda k: Ks) if Ks.ndim == 2 else (lambda k: Ks[k])
+    sks = [sparsify.sparsify_coo(keys[k], kernel_k(k), probs[k], s, cap) for k in range(m)]
     rows = jnp.stack([sk.rows for sk in sks])  # (m, cap)
     cols = jnp.stack([sk.cols for sk in sks])
     vals = jnp.stack([sk.vals for sk in sks])
@@ -132,3 +153,40 @@ def spar_ibp(
         matvec, rmatvec, bs, w, n, tol=tol, max_iter=max_iter, dtype=Ks.dtype
     )
     return res, nnz
+
+
+def solve_barycenter(
+    geom,
+    bs: jax.Array,  # (m, n) input measures on the shared support
+    w: jax.Array,  # (m,) barycentric weights
+    eps: float,
+    *,
+    method: str = "ibp",
+    key: jax.Array | None = None,
+    s: float | None = None,
+    cap: int | None = None,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> IBPResult:
+    """Geometry-level barycenter front end (fixed shared support).
+
+    All ``m`` measures live on the same support, so they share one lazily
+    materialized Gibbs kernel from ``geom``. ``method`` is ``"ibp"``
+    (Alg. 5, dense) or ``"spar_ibp"`` (Alg. 6; needs ``key`` and ``s``).
+    """
+    from repro.core.api import Geometry
+
+    geom = geom if isinstance(geom, Geometry) else Geometry(jnp.asarray(geom))
+    K = geom.kernel(eps)  # shared (n, n): never replicated per measure
+    if method == "ibp":
+        if key is not None or s is not None or cap is not None:
+            raise TypeError(
+                "method='ibp' takes no key/s/cap — did you mean method='spar_ibp'?"
+            )
+        return ibp(K, bs, w, tol=tol, max_iter=max_iter)
+    if method == "spar_ibp":
+        if key is None or s is None:
+            raise ValueError("method='spar_ibp' requires key= and s=")
+        res, _ = spar_ibp(key, K, bs, w, s, cap=cap, tol=tol, max_iter=max_iter)
+        return res
+    raise KeyError(f"unknown barycenter method {method!r}; available: ibp, spar_ibp")

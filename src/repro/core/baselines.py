@@ -38,9 +38,17 @@ def _rho(x: jax.Array, y: jax.Array) -> jax.Array:
     return y - x + safe
 
 
-@partial(jax.jit, static_argnames=("n_updates",))
-def greenkhorn(K: jax.Array, a: jax.Array, b: jax.Array, n_updates: int) -> SinkhornResult:
-    """Greedy Sinkhorn: ``n_updates`` single-coordinate scalings (each O(n))."""
+@partial(jax.jit, static_argnames=("n_updates", "fe"))
+def greenkhorn(
+    K: jax.Array, a: jax.Array, b: jax.Array, n_updates: int, fe: float = 1.0
+) -> SinkhornResult:
+    """Greedy Sinkhorn: ``n_updates`` single-coordinate scalings (each O(n)).
+
+    ``fe = lam/(lam+eps)`` applies the unbalanced scaling update one
+    coordinate at a time (``fe = 1`` is the balanced algorithm of
+    Altschuler et al. 2017; the greedy coordinate choice stays the
+    Bregman-violation rule either way).
+    """
     n, m = K.shape
     u = jnp.ones((n,), a.dtype)
     v = jnp.ones((m,), b.dtype)
@@ -49,8 +57,15 @@ def greenkhorn(K: jax.Array, a: jax.Array, b: jax.Array, n_updates: int) -> Sink
 
     def body(_, state):
         u, v, Kv, KTu = state
-        r = u * Kv  # current row marginals
-        c = v * KTu  # current col marginals
+        if fe == 1.0:  # static: balanced path stays byte-identical
+            r = u * Kv  # current row marginals
+            c = v * KTu  # current col marginals
+        else:
+            # UOT fixed point is u_i = (a_i/Kv_i)^fe, i.e. u_i^{1/fe} Kv_i
+            # = a_i — score violations against that, or the greedy argmax
+            # re-picks an already-converged coordinate forever.
+            r = u ** (1.0 / fe) * Kv
+            c = v ** (1.0 / fe) * KTu
         row_viol = _rho(a, r)
         col_viol = _rho(b, c)
         i = jnp.argmax(row_viol)
@@ -59,18 +74,27 @@ def greenkhorn(K: jax.Array, a: jax.Array, b: jax.Array, n_updates: int) -> Sink
 
         def row_update(u, v, Kv, KTu):
             ui_new = jnp.where(Kv[i] > 0, a[i] / jnp.where(Kv[i] > 0, Kv[i], 1.0), 0.0)
+            if fe != 1.0:  # static: balanced path stays byte-identical
+                ui_new = ui_new**fe
             KTu_new = KTu + (ui_new - u[i]) * K[i, :]
             return u.at[i].set(ui_new), v, Kv, KTu_new
 
         def col_update(u, v, Kv, KTu):
             vj_new = jnp.where(KTu[j] > 0, b[j] / jnp.where(KTu[j] > 0, KTu[j], 1.0), 0.0)
+            if fe != 1.0:
+                vj_new = vj_new**fe
             Kv_new = Kv + (vj_new - v[j]) * K[:, j]
             return u, v.at[j].set(vj_new), Kv_new, KTu
 
         return jax.lax.cond(do_row, row_update, col_update, u, v, Kv, KTu)
 
     u, v, Kv, KTu = jax.lax.fori_loop(0, n_updates, body, (u, v, Kv, KTu))
-    err = jnp.sum(jnp.abs(u * Kv - a)) + jnp.sum(jnp.abs(v * KTu - b))
+    if fe == 1.0:
+        err = jnp.sum(jnp.abs(u * Kv - a)) + jnp.sum(jnp.abs(v * KTu - b))
+    else:  # fixed-point residual in the same transformed coordinates
+        err = jnp.sum(jnp.abs(u ** (1.0 / fe) * Kv - a)) + jnp.sum(
+            jnp.abs(v ** (1.0 / fe) * KTu - b)
+        )
     return SinkhornResult(u, v, jnp.array(n_updates, jnp.int32), err)
 
 
@@ -139,9 +163,14 @@ def screenkhorn_lite(
     decimation: int = 3,
     tol: float = 1e-6,
     max_iter: int = 1000,
+    fe: float = 1.0,
+    renormalize: bool = True,
 ) -> tuple[SinkhornResult, jax.Array, jax.Array]:
     """Active-set screening: keep the ``n/decimation`` heaviest atoms of each
     marginal, solve the restricted problem, leave screened-out scalings at 0.
+
+    For unbalanced problems pass ``fe = lam/(lam+eps)`` and
+    ``renormalize=False`` (the marginal masses are data, not constraints).
 
     Returns ``(result-on-full-size-vectors, active_rows, active_cols)``.
     """
@@ -152,12 +181,13 @@ def screenkhorn_lite(
     cols = jnp.argsort(-b)[:m_keep]
     a_r = a[rows]
     b_r = b[cols]
-    # renormalize the kept mass so the restricted problem is balanced
-    a_r = a_r / jnp.sum(a_r)
-    b_r = b_r / jnp.sum(b_r)
+    if renormalize:
+        # renormalize the kept mass so the restricted problem is balanced
+        a_r = a_r / jnp.sum(a_r)
+        b_r = b_r / jnp.sum(b_r)
     K_r = K[jnp.ix_(rows, cols)]
     res = generic_scaling_loop(
-        lambda v: K_r @ v, lambda u: K_r.T @ u, a_r, b_r, 1.0, tol=tol, max_iter=max_iter
+        lambda v: K_r @ v, lambda u: K_r.T @ u, a_r, b_r, fe, tol=tol, max_iter=max_iter
     )
     u = jnp.zeros((n,), a.dtype).at[rows].set(res.u)
     v = jnp.zeros((m,), b.dtype).at[cols].set(res.v)

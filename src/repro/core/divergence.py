@@ -1,27 +1,20 @@
 """Sinkhorn divergence (paper eq. 38, used by the SSAE generative-modeling
 application):  S(α, β) = OT_eps(α, β) - 1/2 (OT_eps(α, α) + OT_eps(β, β)).
 
-Both a dense-Sinkhorn evaluation and the Spar-Sink-accelerated one are
-provided; the latter is what the paper's SSAE uses.
+All three OT_eps terms are routed through ``solve(problem, method=...)``, so
+the divergence inherits each method's cost profile: with
+``method="spar_sink_coo"`` the iterations and the objective evaluation are
+O(s) per term (the paper's SSAE configuration), and no term materializes a
+dense plan. The legacy ``spar_sink_divergence`` wrapper is kept for
+backward compatibility.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.geometry import squared_euclidean_cost
-from repro.core.sinkhorn import ot_cost_from_plan, plan_from_scalings, sinkhorn
-from repro.core.spar_sink import spar_sink_ot
+from repro.core.api import Geometry, OTProblem, solve
 
 __all__ = ["sinkhorn_divergence", "spar_sink_divergence"]
-
-
-def _ot_eps(x, y, a, b, eps, tol, max_iter):
-    C = squared_euclidean_cost(x, y)
-    K = jnp.exp(-C / eps)
-    res = sinkhorn(K, a, b, tol=tol, max_iter=max_iter)
-    T = plan_from_scalings(res.u, K, res.v)
-    return ot_cost_from_plan(T, C, eps)
 
 
 def sinkhorn_divergence(
@@ -31,12 +24,39 @@ def sinkhorn_divergence(
     b: jax.Array,
     eps: float,
     *,
+    method: str = "dense",
+    key: jax.Array | None = None,
     tol: float = 1e-6,
     max_iter: int = 500,
+    **opts,
 ) -> jax.Array:
-    sxy = _ot_eps(x, y, a, b, eps, tol, max_iter)
-    sxx = _ot_eps(x, x, a, a, eps, tol, max_iter)
-    syy = _ot_eps(y, y, b, b, eps, tol, max_iter)
+    """``S(α, β)`` with every OT_eps term solved by the registered ``method``.
+
+    Sketching methods (``spar_sink_coo``, ``rand_sink``, ...) need ``key``
+    and ``s`` (passed via ``opts``); the key is split across the three terms.
+    A ``key`` passed alongside a deterministic method is ignored.
+    """
+    from repro.core.api.registry import method_accepts
+
+    if key is not None and method_accepts(method, "key"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        keys = ({"key": k1}, {"key": k2}, {"key": k3})
+    else:
+        keys = ({}, {}, {})
+    # forward only the common options the solver understands (e.g. the
+    # greenkhorn solver is budgeted by n_updates, not tol/max_iter)
+    common = {
+        k: v for k, v in (("tol", tol), ("max_iter", max_iter))
+        if method_accepts(method, k)
+    }
+
+    def term(pts_a, pts_b, wa, wb, kw):
+        problem = OTProblem(Geometry.from_points(pts_a, pts_b), wa, wb, eps)
+        return solve(problem, method=method, **common, **kw, **opts).value
+
+    sxy = term(x, y, a, b, keys[0])
+    sxx = term(x, x, a, a, keys[1])
+    syy = term(y, y, b, b, keys[2])
     return sxy - 0.5 * (sxx + syy)
 
 
@@ -52,11 +72,8 @@ def spar_sink_divergence(
     tol: float = 1e-6,
     max_iter: int = 500,
 ) -> jax.Array:
-    k1, k2, k3 = jax.random.split(key, 3)
-    cxy = squared_euclidean_cost(x, y)
-    cxx = squared_euclidean_cost(x, x)
-    cyy = squared_euclidean_cost(y, y)
-    sxy = spar_sink_ot(k1, cxy, a, b, eps, s, tol=tol, max_iter=max_iter).value
-    sxx = spar_sink_ot(k2, cxx, a, a, eps, s, tol=tol, max_iter=max_iter).value
-    syy = spar_sink_ot(k3, cyy, b, b, eps, s, tol=tol, max_iter=max_iter).value
-    return sxy - 0.5 * (sxx + syy)
+    """Spar-Sink-accelerated divergence: O(s) per OT_eps term."""
+    return sinkhorn_divergence(
+        x, y, a, b, eps, method="spar_sink_coo", key=key, s=s,
+        tol=tol, max_iter=max_iter,
+    )

@@ -1,33 +1,34 @@
 """Spar-Sink (paper Algorithms 3 & 4): sketch the kernel, run Sinkhorn on it,
 evaluate the entropic objective on the sparse plan.
 
-Three compute paths share one front end (``method=``):
+The solver implementations live in :mod:`repro.core.api.solvers` behind the
+string-keyed registry (``solve(problem, method="spar_sink_coo")`` etc.).
+This module keeps:
 
-* ``"dense"``      exact eq.(7) sketch as a dense masked array (reference)
-* ``"coo"``        padded-COO, O(s)-per-iteration — the paper's complexity claim
-* ``"block_ell"``  tile-granular TPU path (DESIGN §3), O(s·Bk) dense MXU work
-
-Everything is jit-compatible: ``s`` enters only through probabilities (traced),
-capacities are static.
+* the paper-level sizing helpers ``s0`` / ``default_cap`` /
+  ``default_max_blocks`` (shared by the registry and the benchmarks);
+* the O(s) sparse objective evaluators ``coo_objective_ot`` /
+  ``coo_objective_uot``;
+* ``spar_sink_ot`` / ``spar_sink_uot`` as **deprecated** thin wrappers over
+  ``solve()`` — same signature, same ``SparSinkSolution`` return, bitwise
+  identical results for a given PRNG key.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sparsify
-from repro.core.sinkhorn import (
-    SinkhornResult,
-    generic_scaling_loop,
-    kl_divergence,
-)
+from repro.core.sinkhorn import SinkhornResult, kl_divergence
 
 __all__ = [
     "s0",
     "default_cap",
+    "default_max_blocks",
     "SparSinkSolution",
     "spar_sink_ot",
     "spar_sink_uot",
@@ -36,6 +37,13 @@ __all__ = [
 ]
 
 Method = Literal["dense", "coo", "block_ell"]
+
+# legacy method name -> registry solver name
+_METHOD_TO_REGISTRY = {
+    "dense": "spar_sink_dense",
+    "coo": "spar_sink_coo",
+    "block_ell": "spar_sink_block_ell",
+}
 
 
 def s0(n: int) -> float:
@@ -46,6 +54,19 @@ def s0(n: int) -> float:
 def default_cap(s: float) -> int:
     """Static COO capacity: E[nnz] <= s, Poisson tail ~ sqrt(s)."""
     return int(s + 6.0 * math.sqrt(s) + 16)
+
+
+def default_max_blocks(n: int, s: float, block: int) -> int:
+    """Static ELL width for the block-ELL sketch: ~4x the expected kept tiles
+    per row-block (+4 slack), floored at 4, capped at the full block row.
+    Shared by the OT and UOT paths via the solver registry.
+
+    (The cap is applied *after* the floor — the legacy copies floored last,
+    which produced an ELL width wider than the block row for n//block < 4
+    and crashed the sketch. Identical to the legacy value everywhere else.)"""
+    nrb = max(n // block, 1)
+    want = int(4 * s / (block * block) / nrb) + 4
+    return max(1, min(nrb, max(4, want)))
 
 
 class SparSinkSolution(NamedTuple):
@@ -93,35 +114,31 @@ def coo_objective_uot(
     return tc + lam * kl_divergence(row, a) + lam * kl_divergence(col, b) - eps * ent
 
 
-def _dense_objective_ot(Kt, C, res, eps):
-    T = res.u[:, None] * Kt * res.v[None, :]
-    tc = jnp.sum(jnp.where(T > 0, T * jnp.where(jnp.isinf(C), 0.0, C), 0.0))
-    return tc - eps * jnp.sum(_elem_entropy(T))
+# --------------------------------------------------------------------------
+# Deprecated front ends (Algorithms 3 and 4) — thin wrappers over solve()
+# --------------------------------------------------------------------------
 
 
-def _dense_objective_uot(Kt, C, res, a, b, lam, eps):
-    T = res.u[:, None] * Kt * res.v[None, :]
-    tc = jnp.sum(jnp.where(T > 0, T * jnp.where(jnp.isinf(C), 0.0, C), 0.0))
-    row, col = jnp.sum(T, axis=1), jnp.sum(T, axis=0)
-    return (
-        tc
-        + lam * kl_divergence(row, a)
-        + lam * kl_divergence(col, b)
-        - eps * jnp.sum(_elem_entropy(T))
+def _legacy_solve(problem, method: str, key, s, *, cap, block, max_blocks,
+                  shrinkage, probs, tol, max_iter) -> SparSinkSolution:
+    from repro.core.api import solve  # local import: shim over the new API
+
+    if method not in _METHOD_TO_REGISTRY:
+        raise ValueError(f"unknown method {method!r}")
+    opts: dict = dict(key=key, s=s, shrinkage=shrinkage, probs=probs,
+                      tol=tol, max_iter=max_iter)
+    if method == "coo":
+        opts["cap"] = cap
+    elif method == "block_ell":
+        opts.update(block=block, max_blocks=max_blocks)
+    sol = solve(problem, method=_METHOD_TO_REGISTRY[method], **opts)
+    return SparSinkSolution(sol.value, sol.result, sol.nnz)
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old}() is deprecated; use {new}", DeprecationWarning, stacklevel=3
     )
-
-
-# --------------------------------------------------------------------------
-# Front ends (Algorithms 3 and 4)
-# --------------------------------------------------------------------------
-
-
-def _mix_uniform(probs: jax.Array, shrinkage: float) -> jax.Array:
-    """Condition (ii) of Thm 1: keep p*_ij >= c3 s / n^2 by mixing in uniform."""
-    if shrinkage <= 0.0:
-        return probs
-    n, m = probs.shape
-    return (1.0 - shrinkage) * probs + shrinkage / (n * m)
 
 
 def spar_sink_ot(
@@ -141,53 +158,18 @@ def spar_sink_ot(
     shrinkage: float = 0.0,
     probs: jax.Array | None = None,
 ) -> SparSinkSolution:
-    """Algorithm 3. ``probs`` overrides eq.(9) (e.g. uniform => Rand-Sink)."""
-    K = jnp.where(jnp.isinf(C), 0.0, jnp.exp(-C / eps))
-    if probs is None:
-        probs = sparsify.ot_sampling_probs(a, b)
-    probs = _mix_uniform(probs, shrinkage)
+    """Algorithm 3. ``probs`` overrides eq.(9) (e.g. uniform => Rand-Sink).
 
-    if method == "dense":
-        Kt = sparsify.sparsify_dense(key, K, probs, s)
-        res = generic_scaling_loop(
-            lambda v: Kt @ v, lambda u: Kt.T @ u, a, b, 1.0, tol=tol, max_iter=max_iter
-        )
-        return SparSinkSolution(
-            _dense_objective_ot(Kt, C, res, eps), res, jnp.sum(Kt > 0)
-        )
-    if method == "coo":
-        cap = default_cap(s) if cap is None else cap
-        sk = sparsify.sparsify_coo(key, K, probs, s, cap)
-        res = generic_scaling_loop(
-            lambda v: sparsify.coo_matvec(sk, v),
-            lambda u: sparsify.coo_rmatvec(sk, u),
-            a,
-            b,
-            1.0,
-            tol=tol,
-            max_iter=max_iter,
-        )
-        return SparSinkSolution(coo_objective_ot(sk, C, res, eps), res, sk.nnz)
-    if method == "block_ell":
-        tile_p = sparsify.tile_probs_from_elem(probs, block)
-        n = a.shape[0]
-        if max_blocks is None:
-            max_blocks = max(4, min(n // block, int(4 * s / (block * block) / max(n // block, 1)) + 4))
-        sk = sparsify.sparsify_block_ell(key, K, tile_p, s, block, max_blocks)
-        res = generic_scaling_loop(
-            lambda v: sparsify.block_ell_matvec(sk, v),
-            lambda u: sparsify.block_ell_rmatvec(sk, u),
-            a,
-            b,
-            1.0,
-            tol=tol,
-            max_iter=max_iter,
-        )
-        Kt = sparsify.block_ell_to_dense(sk)
-        return SparSinkSolution(
-            _dense_objective_ot(Kt, C, res, eps), res, jnp.sum(Kt > 0)
-        )
-    raise ValueError(f"unknown method {method!r}")
+    .. deprecated:: use ``solve(OTProblem(Geometry(C), a, b, eps),
+       method="spar_sink_coo", key=key, s=s)`` — identical results.
+    """
+    from repro.core.api import Geometry, OTProblem
+
+    _warn_deprecated("spar_sink_ot", "solve(OTProblem(...), method='spar_sink_coo')")
+    problem = OTProblem(Geometry(C), a, b, eps)
+    return _legacy_solve(problem, method, key, s, cap=cap, block=block,
+                         max_blocks=max_blocks, shrinkage=shrinkage,
+                         probs=probs, tol=tol, max_iter=max_iter)
 
 
 def spar_sink_uot(
@@ -208,54 +190,15 @@ def spar_sink_uot(
     shrinkage: float = 0.0,
     probs: jax.Array | None = None,
 ) -> SparSinkSolution:
-    """Algorithm 4. ``probs`` overrides eq.(11)."""
-    logK = jnp.where(jnp.isinf(C), -jnp.inf, -C / eps)
-    K = jnp.where(jnp.isinf(C), 0.0, jnp.exp(-C / eps))
-    if probs is None:
-        probs = sparsify.uot_sampling_probs(a, b, logK, lam, eps)
-    probs = _mix_uniform(probs, shrinkage)
-    fe = lam / (lam + eps)
+    """Algorithm 4. ``probs`` overrides eq.(11).
 
-    if method == "dense":
-        Kt = sparsify.sparsify_dense(key, K, probs, s)
-        res = generic_scaling_loop(
-            lambda v: Kt @ v, lambda u: Kt.T @ u, a, b, fe, tol=tol, max_iter=max_iter
-        )
-        return SparSinkSolution(
-            _dense_objective_uot(Kt, C, res, a, b, lam, eps), res, jnp.sum(Kt > 0)
-        )
-    if method == "coo":
-        cap = default_cap(s) if cap is None else cap
-        sk = sparsify.sparsify_coo(key, K, probs, s, cap)
-        res = generic_scaling_loop(
-            lambda v: sparsify.coo_matvec(sk, v),
-            lambda u: sparsify.coo_rmatvec(sk, u),
-            a,
-            b,
-            fe,
-            tol=tol,
-            max_iter=max_iter,
-        )
-        return SparSinkSolution(
-            coo_objective_uot(sk, C, res, a, b, lam, eps), res, sk.nnz
-        )
-    if method == "block_ell":
-        tile_p = sparsify.tile_probs_from_elem(probs, block)
-        n = a.shape[0]
-        if max_blocks is None:
-            max_blocks = max(4, min(n // block, int(4 * s / (block * block) / max(n // block, 1)) + 4))
-        sk = sparsify.sparsify_block_ell(key, K, tile_p, s, block, max_blocks)
-        res = generic_scaling_loop(
-            lambda v: sparsify.block_ell_matvec(sk, v),
-            lambda u: sparsify.block_ell_rmatvec(sk, u),
-            a,
-            b,
-            fe,
-            tol=tol,
-            max_iter=max_iter,
-        )
-        Kt = sparsify.block_ell_to_dense(sk)
-        return SparSinkSolution(
-            _dense_objective_uot(Kt, C, res, a, b, lam, eps), res, jnp.sum(Kt > 0)
-        )
-    raise ValueError(f"unknown method {method!r}")
+    .. deprecated:: use ``solve(UOTProblem(Geometry(C), a, b, eps, lam=lam),
+       method="spar_sink_coo", key=key, s=s)`` — identical results.
+    """
+    from repro.core.api import Geometry, UOTProblem
+
+    _warn_deprecated("spar_sink_uot", "solve(UOTProblem(...), method='spar_sink_coo')")
+    problem = UOTProblem(Geometry(C), a, b, eps, lam=lam)
+    return _legacy_solve(problem, method, key, s, cap=cap, block=block,
+                         max_blocks=max_blocks, shrinkage=shrinkage,
+                         probs=probs, tol=tol, max_iter=max_iter)

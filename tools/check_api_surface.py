@@ -1,0 +1,58 @@
+"""Guard the redesigned public API surface against silent drift.
+
+Asserts that ``repro.core.__all__`` (and ``repro.core.api.__all__``) exactly
+matches the actually-exported public names: every declared name must
+resolve, every resolvable public name must be declared, no duplicates, and
+the list must stay sorted. Run directly (exit code 1 on drift) or through
+the tier-1 test in ``tests/test_api.py``:
+
+    PYTHONPATH=src python tools/check_api_surface.py
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import types
+
+MODULES = ("repro.core", "repro.core.api")
+
+
+def check_module(modname: str) -> list[str]:
+    """Return a list of human-readable drift errors for one module."""
+    errors: list[str] = []
+    mod = importlib.import_module(modname)
+    declared = list(getattr(mod, "__all__", []))
+    if not declared:
+        return [f"{modname}: missing or empty __all__"]
+
+    dupes = sorted({n for n in declared if declared.count(n) > 1})
+    if dupes:
+        errors.append(f"{modname}: duplicate __all__ entries: {dupes}")
+    if declared != sorted(declared):
+        errors.append(f"{modname}: __all__ is not sorted")
+
+    actual = {
+        name
+        for name, value in vars(mod).items()
+        if not name.startswith("_") and not isinstance(value, types.ModuleType)
+    }
+    missing = sorted(set(declared) - actual)  # declared but not exported
+    undeclared = sorted(actual - set(declared))  # exported but not declared
+    if missing:
+        errors.append(f"{modname}: in __all__ but not exported: {missing}")
+    if undeclared:
+        errors.append(f"{modname}: exported but not in __all__: {undeclared}")
+    return errors
+
+
+def main() -> int:
+    errors = [e for m in MODULES for e in check_module(m)]
+    for e in errors:
+        print(f"API SURFACE DRIFT: {e}", file=sys.stderr)
+    if not errors:
+        print(f"api surface OK: {', '.join(MODULES)}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
