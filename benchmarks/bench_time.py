@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, log, timed
+from benchmarks.common import emit, log, record, timed
 from repro.core import Geometry, OTProblem, build_coo_sketch, s0
 from repro.core.sparsify import coo_matvec, coo_rmatvec
 from repro.data import make_measures
@@ -58,6 +58,10 @@ def run(ns=(800, 1600, 3200), d=5, eps=0.1):
         emit(f"fig5/n{n}/sinkhorn_iter", td * 1e6, f"nnz={n*n}")
         emit(f"fig5/n{n}/spar_sink_iter", ts * 1e6,
              f"nnz={int(sk.nnz)} speedup={td/ts:.1f}x")
+        record(f"fig5/n{n}/sinkhorn_iter", method="dense", n=n,
+               wall_time_s=td, nnz=n * n)
+        record(f"fig5/n{n}/spar_sink_iter", method="spar_sink_coo", n=n,
+               wall_time_s=ts, nnz=int(sk.nnz), speedup=td / ts)
     # empirical scaling exponents (log-log slope)
     ln = np.log(np.asarray(ns, float))
     slope_d = np.polyfit(ln, np.log(dense_t), 1)[0]

@@ -23,6 +23,44 @@ def emit(name: str, us_per_call: float, derived) -> None:
     sys.stdout.flush()
 
 
+# --------------------------------------------------------------------------
+# Machine-readable results (benchmarks/run.py --emit-json)
+# --------------------------------------------------------------------------
+
+json_records: list[dict] = []
+
+
+def record(name: str, *, method: str, n: int, B: int = 1,
+           wall_time_s: float, rmae: float | None = None, **extra) -> None:
+    """Append one standardized result row for the BENCH_*.json emitters.
+
+    The schema is fixed from this PR on so the perf trajectory stays
+    machine-comparable across PRs: every row carries (name, method, n, B,
+    wall_time_s, rmae) plus free-form extras."""
+    json_records.append(
+        dict(name=name, method=method, n=n, B=B,
+             wall_time_s=wall_time_s, rmae=rmae, **extra)
+    )
+
+
+def write_json(path: str, suite: str) -> None:
+    """Write (and clear) the collected records for one suite."""
+    import json
+    import platform
+
+    payload = {
+        "schema": "repro-bench-v1",
+        "suite": suite,
+        "backend": jax.default_backend(),
+        "machine": platform.machine(),
+        "results": list(json_records),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    json_records.clear()
+    log(f"wrote {path} ({len(payload['results'])} rows)")
+
+
 def log(msg: str) -> None:
     print(msg, file=sys.stderr)
     sys.stderr.flush()

@@ -2,16 +2,50 @@
 
 Emits ``name,us_per_call,derived`` CSV on stdout (progress on stderr).
 Full-size variants: ``python -m benchmarks.bench_<x> --full``.
+
+``--emit-json [DIR]`` runs the machine-readable perf suites (batched
+dispatch + time-vs-n) and writes standardized ``BENCH_batch.json`` /
+``BENCH_time.json`` (schema ``repro-bench-v1``: method, n, B, wall-time,
+RMAE per row) so the perf trajectory stays comparable across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 
 
+def _emit_json(out_dir: str) -> None:
+    from benchmarks import bench_batch, bench_time, common
+
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"--- batch (JSON -> {out_dir}) ---", file=sys.stderr)
+    bench_batch.run()
+    common.write_json(os.path.join(out_dir, "BENCH_batch.json"), "batch")
+    print("--- time vs n (JSON) ---", file=sys.stderr)
+    bench_time.run()
+    common.write_json(os.path.join(out_dir, "BENCH_time.json"), "time")
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--emit-json",
+        nargs="?",
+        const=".",
+        default=None,
+        metavar="DIR",
+        help="run the perf suites and write BENCH_batch.json / BENCH_time.json",
+    )
+    args = ap.parse_args()
+    if args.emit_json is not None:
+        _emit_json(args.emit_json)
+        return
+
     from benchmarks import (
         bench_barycenter,
+        bench_batch,
         bench_echo,
         bench_rmae_ot,
         bench_rmae_uot,
@@ -35,6 +69,7 @@ def main() -> None:
             n_videos=3, size=48, stride=3, methods=("sinkhorn", "spar_sink"),
             s_mult=16)),
         ("router (MoE spar-sink)", lambda: bench_router.run(n_tokens=1024)),
+        ("batch (executor vs loop)", lambda: bench_batch.run()),
         ("roofline (dry-run artifacts)", lambda: bench_roofline.summarize(
             bench_roofline.best_artifact(), "1pod")),
     ]

@@ -1,0 +1,48 @@
+"""Batched OT execution engine: B independent problems per dispatch.
+
+    from repro.batch import BucketedExecutor
+    from repro.core import Geometry, OTProblem, UOTProblem, s0
+
+    executor = BucketedExecutor()
+    sols = executor.solve_batch(problems, method="spar_sink_coo",
+                                keys=keys, s=8 * s0(512))
+    sols[0].value, sols[0].plan()   # ordinary Solutions, O(cap) plans
+
+Layers (see each module):
+
+* `repro.batch.problems`  — `BatchedProblem` padded pytrees + shape buckets
+* `repro.batch.solvers`   — whole-batch jit kernels (dense / log /
+  fixed-cap batched COO Spar-Sink) behind `register_batched_solver`
+* `repro.batch.executor`  — `BucketedExecutor`: LRU jit cache keyed on
+  (bucket shape, method, static opts), mesh fan-out of the batch axis
+* `repro.launch.serve_ot` — microbatching request-queue serving driver
+"""
+from repro.batch.executor import BucketedExecutor
+from repro.batch.problems import BatchedProblem, bucket_shape, group_by_bucket
+from repro.batch.solvers import (
+    BatchedResult,
+    BatchedSketch,
+    batchable_methods,
+    batched_coo_sketch,
+    batched_log_loop,
+    batched_scaling_loop,
+    build_batched_sketch,
+    get_batched_solver,
+    register_batched_solver,
+)
+
+__all__ = [
+    "BatchedProblem",
+    "BatchedResult",
+    "BatchedSketch",
+    "BucketedExecutor",
+    "batchable_methods",
+    "batched_coo_sketch",
+    "batched_log_loop",
+    "batched_scaling_loop",
+    "bucket_shape",
+    "build_batched_sketch",
+    "get_batched_solver",
+    "group_by_bucket",
+    "register_batched_solver",
+]

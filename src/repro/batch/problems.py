@@ -1,0 +1,176 @@
+"""`BatchedProblem`: B independent OT/UOT problems as one padded pytree.
+
+Heterogeneous ``(n_i, m_i)`` supports are padded into a shared *bucket*
+shape ``(n, m)`` so a whole batch is one fixed-shape jit'd program:
+
+* marginals are padded with **zero mass** (``a_i = 0`` beyond ``n_i``);
+* costs are padded with ``+inf`` — exactly the `Geometry` blocked-entry
+  convention, so ``K = 0`` / ``log K = -inf`` on every padded row/column.
+
+Padding is *inert* through the scaling and log-domain iterations:
+
+* scaling domain: ``u = (a / K v)^fe`` uses the 0-where-``Kv==0``
+  convention of :func:`repro.core.sinkhorn._safe_div`; padded rows have
+  ``a_i = 0`` **and** ``(K v)_i = 0``, so their scalings stay 0 and they
+  contribute ``u_i K_ij v_j = 0`` mass everywhere. Real rows never see
+  padded columns because ``K_ij = 0`` there.
+* log domain: padded atoms have ``log a_i = -inf``; the loop pins their
+  potentials to ``-inf`` (dead atoms) and ``log K = -inf`` removes them
+  from every logsumexp.
+
+``UOTProblem(lam=inf)`` and plain `OTProblem` both encode as ``lam = inf``
+(the balanced degeneration of paper Sec. 2.2), so one ``(B,)`` ``lam``
+vector carries a mixed OT + UOT batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api.problems import OTProblem, UOTProblem
+from repro.core.geometry import gibbs_kernel, log_gibbs_kernel
+
+__all__ = ["BatchedProblem", "bucket_shape", "group_by_bucket"]
+
+
+def bucket_shape(n: int, m: int, *, min_size: int = 64) -> tuple[int, int]:
+    """Round ``(n, m)`` up to the next power-of-two bucket (floored at
+    ``min_size``) — a small set of shapes, so the jit cache stays small."""
+
+    def up(v: int) -> int:
+        b = min_size
+        while b < v:
+            b *= 2
+        return b
+
+    return up(n), up(m)
+
+
+def group_by_bucket(
+    problems: Sequence[OTProblem], *, min_size: int = 64
+) -> dict[tuple[int, int], list[int]]:
+    """Indices of ``problems`` grouped by their padded bucket shape."""
+    groups: dict[tuple[int, int], list[int]] = {}
+    for i, p in enumerate(problems):
+        n, m = p.shape
+        groups.setdefault(bucket_shape(n, m, min_size=min_size), []).append(i)
+    return groups
+
+
+def _pad_to(x: jax.Array, size: int, axis: int, value=0.0) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad < 0:
+        raise ValueError(f"bucket too small: need {x.shape[axis]}, got {size}")
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(eq=False)
+class BatchedProblem:
+    """B problems padded to one bucket shape; a pytree, so it flows through
+    jit / vmap / device_put directly (bucket shape is carried by the array
+    shapes themselves — jit specializes per bucket automatically)."""
+
+    cost: jax.Array  # (B, n, m); +inf on padding and blocked entries
+    a: jax.Array  # (B, n);   0 on padding
+    b: jax.Array  # (B, m);   0 on padding
+    eps: jax.Array  # (B,)
+    lam: jax.Array  # (B,); +inf encodes balanced OT
+    n_sizes: jax.Array  # (B,) int32 true row counts
+    m_sizes: jax.Array  # (B,) int32 true col counts
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (
+            (self.cost, self.a, self.b, self.eps, self.lam, self.n_sizes, self.m_sizes),
+            None,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -------------------------------------------------------------- ctors
+    @classmethod
+    def from_problems(
+        cls, problems: Sequence[OTProblem], *, bucket: tuple[int, int] | None = None
+    ) -> "BatchedProblem":
+        """Pad and stack problems into one batch. All problems must fit the
+        bucket; with ``bucket=None`` the max support sizes are used."""
+        if not problems:
+            raise ValueError("empty batch")
+        if bucket is None:
+            bucket = (
+                max(p.shape[0] for p in problems),
+                max(p.shape[1] for p in problems),
+            )
+        n, m = bucket
+        dtype = jnp.result_type(*[p.geom.cost.dtype for p in problems])
+        costs, a_s, b_s, eps_s, lam_s = [], [], [], [], []
+        for p in problems:
+            costs.append(
+                _pad_to(_pad_to(p.geom.cost.astype(dtype), n, 0, jnp.inf), m, 1, jnp.inf)
+            )
+            a_s.append(_pad_to(p.a.astype(dtype), n, 0))
+            b_s.append(_pad_to(p.b.astype(dtype), m, 0))
+            eps_s.append(float(p.eps))
+            lam_s.append(
+                float(p.lam)
+                if isinstance(p, UOTProblem) and not p.is_balanced
+                else np.inf
+            )
+        return cls(
+            cost=jnp.stack(costs),
+            a=jnp.stack(a_s),
+            b=jnp.stack(b_s),
+            eps=jnp.asarray(eps_s, dtype),
+            lam=jnp.asarray(lam_s, dtype),
+            n_sizes=jnp.asarray([p.shape[0] for p in problems], jnp.int32),
+            m_sizes=jnp.asarray([p.shape[1] for p in problems], jnp.int32),
+        )
+
+    # -------------------------------------------------------------- views
+    @property
+    def batch(self) -> int:
+        return self.a.shape[0]
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self.a.shape[0], self.a.shape[1], self.b.shape[1])
+
+    @property
+    def is_balanced(self) -> jax.Array:
+        """(B,) bool — which elements are balanced OT (``lam = inf``)."""
+        return jnp.isinf(self.lam)
+
+    @property
+    def fe(self) -> jax.Array:
+        """(B,) scaling-update exponents ``lam/(lam+eps)`` (1 where balanced)."""
+        return jnp.where(jnp.isinf(self.lam), 1.0, self.lam / (self.lam + self.eps))
+
+    def kernel(self) -> jax.Array:
+        """(B, n, m) Gibbs kernels; padded/blocked entries are exactly 0."""
+        return gibbs_kernel(self.cost, self.eps[:, None, None])
+
+    def log_kernel(self) -> jax.Array:
+        """(B, n, m) log-kernels; padded/blocked entries are exactly -inf."""
+        return log_gibbs_kernel(self.cost, self.eps[:, None, None])
+
+    def row_mask(self) -> jax.Array:
+        """(B, n) bool — True on real (non-padded) rows."""
+        return jnp.arange(self.a.shape[1])[None, :] < self.n_sizes[:, None]
+
+    def col_mask(self) -> jax.Array:
+        return jnp.arange(self.b.shape[1])[None, :] < self.m_sizes[:, None]
+
+    def __repr__(self) -> str:
+        bsz, n, m = self.shape
+        return f"BatchedProblem(B={bsz}, bucket={n}x{m})"

@@ -1,0 +1,430 @@
+"""Batched solver kernels: whole-batch jit programs over `BatchedProblem`.
+
+Three registered batched methods mirror the per-problem registry paths:
+
+* ``dense``         — scaling-domain Sinkhorn on the (B, n, m) Gibbs kernels
+* ``log``           — log-domain Sinkhorn on the (B, n, m) log-kernels
+* ``spar_sink_coo`` — paper Alg. 3/4 on a fixed-cap batched COO sketch:
+                      one ``(B, cap)`` index/value array, per-problem PRNG
+                      keys, one segment-sum mat-vec pair per iteration
+
+The iteration loops are *per-element frozen* versions of
+:func:`repro.core.sinkhorn.generic_scaling_loop` /
+:func:`~repro.core.sinkhorn.generic_log_loop`: one `lax.while_loop` runs
+until every element has met its own stopping rule, and converged elements
+stop updating (their trajectories are exactly the per-problem ones — same
+iteration counts, same stall detection — so batched results match
+per-problem ``solve()``).
+
+Sketch construction is split so Monte Carlo draws stay *bitwise identical*
+to per-problem ``build_coo_sketch``:
+
+* `build_batched_sketch` (the executor's default) draws each element's
+  sketch at its **true** ``(n_i, m_i)`` shape host-side — the exact bits of
+  the per-problem path for the same PRNG key — and stacks the padded COO
+  triples into one ``(B, cap)`` array; only the solve remains to jit.
+* `batched_coo_sketch` is the fully-fused in-jit variant (`lax.map` over
+  the batch): same bits *when a problem exactly fills its bucket* (draw
+  shapes match), otherwise an equally-distributed but different draw on the
+  padded support (padding has probability 0 either way).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.batch.problems import BatchedProblem
+from repro.core import sparsify
+from repro.core.sinkhorn import (
+    kl_divergence,
+    ot_cost_from_plan,
+    uot_cost_from_plan,
+)
+from repro.core.spar_sink import default_cap
+
+__all__ = [
+    "BatchedResult",
+    "BatchedSketch",
+    "batchable_methods",
+    "batched_coo_sketch",
+    "batched_log_loop",
+    "batched_scaling_loop",
+    "build_batched_sketch",
+    "get_batched_solver",
+    "register_batched_solver",
+]
+
+
+class BatchedSketch(NamedTuple):
+    """B fixed-cap padded-COO kernel sketches as one array set (the batched
+    `repro.core.sparsify.SparseKernelCOO`; padded slots carry vals == 0)."""
+
+    rows: jax.Array  # (B, cap) int32
+    cols: jax.Array  # (B, cap) int32
+    vals: jax.Array  # (B, cap)
+    nnz: jax.Array  # (B,) int32
+
+    @property
+    def cap(self) -> int:
+        return self.rows.shape[1]
+
+
+class BatchedResult(NamedTuple):
+    """Per-element solver outputs; sketch fields are ``None`` off the
+    spar_sink path (None is an empty pytree node, so jit passes it through)."""
+
+    u: jax.Array  # (B, n) scalings (or potentials f in the log domain)
+    v: jax.Array  # (B, m)
+    n_iter: jax.Array  # (B,) int32
+    err: jax.Array  # (B,)
+    value: jax.Array  # (B,) entropic objective estimates
+    rows: jax.Array | None = None  # (B, cap) int32
+    cols: jax.Array | None = None  # (B, cap) int32
+    vals: jax.Array | None = None  # (B, cap) sketch kernel values
+    nnz: jax.Array | None = None  # (B,) int32
+
+
+# --------------------------------------------------------------------------
+# Batched iteration loops (per-element freezing)
+# --------------------------------------------------------------------------
+
+
+def _l1(x: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.abs(x), axis=-1)
+
+
+def _safe_div(num: jax.Array, den: jax.Array) -> jax.Array:
+    return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+def batched_scaling_loop(
+    matvec: Callable[[jax.Array], jax.Array],
+    rmatvec: Callable[[jax.Array], jax.Array],
+    a: jax.Array,
+    b: jax.Array,
+    fe: jax.Array,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+    patience: int = 100,
+):
+    """Scaling-domain Sinkhorn over a batch; ``matvec: (B, m) -> (B, n)``.
+
+    Each element follows exactly the per-problem loop (stopping rule,
+    stall detection) and is frozen once it stops; the while_loop exits when
+    the whole batch is done. Extra wall-clock cost vs the slowest element
+    is zero — frozen elements' updates are computed but discarded.
+    """
+    B, n = a.shape
+    m = b.shape[1]
+    u0 = jnp.ones((B, n), a.dtype)
+    v0 = jnp.ones((B, m), b.dtype)
+    big = jnp.full((B,), jnp.inf, a.dtype)
+    fe_col = fe[:, None]
+
+    def cond(state):
+        return jnp.any(state[-1])
+
+    def body(state):
+        u, v, t, err, best, since, active = state
+        Kv = matvec(v)
+        u_new = _safe_div(a, Kv) ** fe_col
+        KTu = rmatvec(u_new)
+        v_new = _safe_div(b, KTu) ** fe_col
+        err_new = _l1(u_new - u) + _l1(v_new - v)
+        marg = _l1(v * KTu - b)
+        improved = marg < best * (1.0 - 1e-4)
+        best_new = jnp.minimum(best, marg)
+        since_new = jnp.where(improved, 0, since + 1)
+        # freeze finished elements at their final state
+        keep = active[:, None]
+        u = jnp.where(keep, u_new, u)
+        v = jnp.where(keep, v_new, v)
+        err = jnp.where(active, err_new, err)
+        best = jnp.where(active, best_new, best)
+        since = jnp.where(active, since_new, since)
+        t = jnp.where(active, t + 1, t)
+        active = active & (err > tol) & (t < max_iter) & (since < patience)
+        return u, v, t, err, best, since, active
+
+    state = (
+        u0,
+        v0,
+        jnp.zeros((B,), jnp.int32),
+        big,
+        big,
+        jnp.zeros((B,), jnp.int32),
+        jnp.ones((B,), bool),
+    )
+    u, v, t, err, _, _, _ = jax.lax.while_loop(cond, body, state)
+    return u, v, t, err
+
+
+def batched_log_loop(
+    lse_row: Callable[[jax.Array], jax.Array],
+    lse_col: Callable[[jax.Array], jax.Array],
+    loga: jax.Array,
+    logb: jax.Array,
+    eps: jax.Array,
+    fe: jax.Array,
+    *,
+    tol: float = 1e-9,
+    max_iter: int = 1000,
+):
+    """Log-domain Sinkhorn over a batch on potentials; per-element freezing.
+    ``lse_row(g): (B, m) -> (B, n)`` and vice versa; ``eps``/``fe`` are (B,)."""
+    B, n = loga.shape
+    m = logb.shape[1]
+    f0 = jnp.zeros((B, n), loga.dtype)
+    g0 = jnp.zeros((B, m), logb.dtype)
+    neg_inf_a = jnp.isneginf(loga)
+    neg_inf_b = jnp.isneginf(logb)
+    scale = (fe * eps)[:, None]
+
+    def cond(state):
+        return jnp.any(state[-1])
+
+    def body(state):
+        f, g, t, err, active = state
+        f_new = scale * (loga - lse_row(g))
+        f_new = jnp.where(neg_inf_a, -jnp.inf, f_new)
+        g_new = scale * (logb - lse_col(f_new))
+        g_new = jnp.where(neg_inf_b, -jnp.inf, g_new)
+        df = jnp.where(neg_inf_a, 0.0, jnp.abs(f_new - f))
+        dg = jnp.where(neg_inf_b, 0.0, jnp.abs(g_new - g))
+        err_new = jnp.max(df, axis=-1) + jnp.max(dg, axis=-1)
+        keep = active[:, None]
+        f = jnp.where(keep, f_new, f)
+        g = jnp.where(keep, g_new, g)
+        err = jnp.where(active, err_new, err)
+        t = jnp.where(active, t + 1, t)
+        active = active & (err > tol) & (t < max_iter)
+        return f, g, t, err, active
+
+    state = (
+        f0,
+        g0,
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), jnp.inf, loga.dtype),
+        jnp.ones((B,), bool),
+    )
+    f, g, t, err, _ = jax.lax.while_loop(cond, body, state)
+    return f, g, t, err
+
+
+# --------------------------------------------------------------------------
+# Shared batched pieces
+# --------------------------------------------------------------------------
+
+
+def _masked_log(x: jax.Array) -> jax.Array:
+    return jnp.where(x > 0, jnp.log(jnp.where(x > 0, x, 1.0)), -jnp.inf)
+
+
+def _batched_value_from_plan(bp: BatchedProblem, T: jax.Array) -> jax.Array:
+    """Per-element entropic objective of dense plans, OT/UOT selected per
+    element (the lam=inf branch of the UOT formula is inf/nan and discarded
+    by the where — exactly `UOTProblem.objective`'s balanced branch)."""
+    v_ot = jax.vmap(ot_cost_from_plan)(T, bp.cost, bp.eps)
+    v_uot = jax.vmap(uot_cost_from_plan)(T, bp.cost, bp.a, bp.b, bp.lam, bp.eps)
+    return jnp.where(bp.is_balanced, v_ot, v_uot)
+
+
+def _element_probs(cost_i, a_i, b_i, eps_i, lam_i) -> jax.Array:
+    """Per-element sampling probabilities: eq. (9) where balanced, eq. (11)
+    otherwise — the batched mirror of `repro.core.api.solvers.sampling_probs`."""
+    p_ot = sparsify.ot_sampling_probs(a_i, b_i)
+    logK_i = jnp.where(jnp.isinf(cost_i), -jnp.inf, -cost_i / eps_i)
+    p_uot = sparsify.uot_sampling_probs(a_i, b_i, logK_i, lam_i, eps_i)
+    return jnp.where(jnp.isinf(lam_i), p_ot, p_uot)
+
+
+# --------------------------------------------------------------------------
+# Batched solver registry
+# --------------------------------------------------------------------------
+
+BatchedSolverFn = Callable[..., BatchedResult]
+
+_BATCH_REGISTRY: dict[str, BatchedSolverFn] = {}
+
+
+def register_batched_solver(name: str) -> Callable[[BatchedSolverFn], BatchedSolverFn]:
+    """Decorator: register a batched kernel under the per-problem method name."""
+
+    def deco(fn: BatchedSolverFn) -> BatchedSolverFn:
+        if name in _BATCH_REGISTRY:
+            raise ValueError(f"batched solver {name!r} already registered")
+        _BATCH_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def batchable_methods() -> list[str]:
+    """Method names `BucketedExecutor` can dispatch (a subset of
+    `repro.core.api.available_methods()`)."""
+    return sorted(_BATCH_REGISTRY)
+
+
+def get_batched_solver(method: str) -> BatchedSolverFn:
+    try:
+        return _BATCH_REGISTRY[method]
+    except KeyError:
+        raise KeyError(
+            f"method {method!r} has no batched kernel; batchable: "
+            f"{', '.join(sorted(_BATCH_REGISTRY))}"
+        ) from None
+
+
+@register_batched_solver("dense")
+def batched_solve_dense(
+    bp: BatchedProblem,
+    keys: jax.Array | None = None,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> BatchedResult:
+    """Scaling-domain Sinkhorn on B dense Gibbs kernels at once."""
+    del keys
+    K = bp.kernel()
+    u, v, t, err = batched_scaling_loop(
+        lambda vv: jnp.einsum("bnm,bm->bn", K, vv),
+        lambda uu: jnp.einsum("bnm,bn->bm", K, uu),
+        bp.a,
+        bp.b,
+        bp.fe,
+        tol=tol,
+        max_iter=max_iter,
+    )
+    T = u[:, :, None] * K * v[:, None, :]
+    return BatchedResult(u, v, t, err, _batched_value_from_plan(bp, T))
+
+
+@register_batched_solver("log")
+def batched_solve_log(
+    bp: BatchedProblem,
+    keys: jax.Array | None = None,
+    *,
+    tol: float = 1e-9,
+    max_iter: int = 1000,
+) -> BatchedResult:
+    """Log-domain Sinkhorn on B log-kernels; returns potentials ``(f, g)``."""
+    del keys
+    logK = bp.log_kernel()
+    f, g, t, err = batched_log_loop(
+        lambda gg: jax.scipy.special.logsumexp(
+            logK + gg[:, None, :] / bp.eps[:, None, None], axis=2
+        ),
+        lambda ff: jax.scipy.special.logsumexp(
+            logK + ff[:, :, None] / bp.eps[:, None, None], axis=1
+        ),
+        _masked_log(bp.a),
+        _masked_log(bp.b),
+        bp.eps,
+        bp.fe,
+        tol=tol,
+        max_iter=max_iter,
+    )
+    logT = logK + f[:, :, None] / bp.eps[:, None, None] + g[:, None, :] / bp.eps[:, None, None]
+    T = jnp.where(jnp.isneginf(logT), 0.0, jnp.exp(logT))
+    return BatchedResult(f, g, t, err, _batched_value_from_plan(bp, T))
+
+
+def build_batched_sketch(
+    problems, keys, s: float, cap: int | None = None
+) -> BatchedSketch:
+    """Stack per-problem importance sketches into one fixed-cap array set.
+
+    Each element's draw happens at its *true* support shape through
+    `repro.core.api.build_coo_sketch` — bitwise the sketch the per-problem
+    ``solve(..., method="spar_sink_coo")`` builds from the same PRNG key —
+    so batched results are exactly reproducible against per-problem runs.
+    Indices need no offsetting: padded bucket rows/cols have probability 0.
+    """
+    from repro.core.api.solvers import build_coo_sketch
+
+    cap = default_cap(s) if cap is None else cap
+    sks = [build_coo_sketch(p, k, s, cap=cap) for p, k in zip(problems, keys)]
+    return BatchedSketch(
+        rows=jnp.stack([sk.rows for sk in sks]),
+        cols=jnp.stack([sk.cols for sk in sks]),
+        vals=jnp.stack([sk.vals for sk in sks]),
+        nnz=jnp.stack([sk.nnz for sk in sks]),
+    )
+
+
+def batched_coo_sketch(
+    bp: BatchedProblem, keys: jax.Array, s: float, cap: int | None = None
+) -> BatchedSketch:
+    """Fully in-jit sketch construction (`lax.map` over the batch) at the
+    bucket shape. Bitwise-equal to `build_batched_sketch` for elements that
+    exactly fill the bucket; padded elements get an equally-distributed but
+    different draw (see module docstring). Use inside a jit'd pipeline when
+    the eager per-problem build would dominate dispatch latency."""
+    cap = default_cap(s) if cap is None else cap
+
+    def build_one(args):
+        cost_i, a_i, b_i, eps_i, lam_i, key_i = args
+        K_i = jnp.where(jnp.isinf(cost_i), 0.0, jnp.exp(-cost_i / eps_i))
+        probs = _element_probs(cost_i, a_i, b_i, eps_i, lam_i)
+        sk = sparsify.sparsify_coo(key_i, K_i, probs, s, cap)
+        return sk.rows, sk.cols, sk.vals, sk.nnz
+
+    rows, cols, vals, nnz = jax.lax.map(
+        build_one, (bp.cost, bp.a, bp.b, bp.eps, bp.lam, keys)
+    )
+    return BatchedSketch(rows, cols, vals, nnz)
+
+
+@register_batched_solver("spar_sink_coo")
+def batched_solve_spar_sink(
+    bp: BatchedProblem,
+    sketch: BatchedSketch,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> BatchedResult:
+    """Spar-Sink (paper Alg. 3/4) on a fixed-cap batched COO sketch: two
+    batched segment-sum mat-vecs per iteration, O(cap) objective per element
+    (the batched mirror of ``coo_objective_ot`` / ``coo_objective_uot``)."""
+    _, n, m = bp.shape
+    rows, cols, vals, nnz = sketch
+    # The flat-segment reduction lives in repro.kernels (one implementation,
+    # also the TPU entry point); it is bitwise B per-problem `coo_matvec`s.
+    from repro.kernels.ops import batched_coo_matvec, batched_coo_rmatvec
+
+    def coo_matvec(v):  # (B, m) -> (B, n)
+        return batched_coo_matvec(
+            rows, vals, jnp.take_along_axis(v, cols, axis=1), n=n
+        )
+
+    def coo_rmatvec(u):  # (B, n) -> (B, m)
+        return batched_coo_rmatvec(
+            cols, vals, jnp.take_along_axis(u, rows, axis=1), m=m
+        )
+
+    u, v, t, err = batched_scaling_loop(
+        coo_matvec, coo_rmatvec, bp.a, bp.b, bp.fe, tol=tol, max_iter=max_iter
+    )
+
+    c_e = jax.vmap(lambda C, r, c: C[r, c])(bp.cost, rows, cols)
+    t_e = (
+        jnp.take_along_axis(u, rows, axis=1)
+        * vals
+        * jnp.take_along_axis(v, cols, axis=1)
+    )
+    logt = jnp.log(jnp.where(t_e > 0, t_e, 1.0))
+    ent = jnp.sum(jnp.where(t_e > 0, -t_e * (logt - 1.0), 0.0), axis=1)
+    tc = jnp.sum(
+        jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0), axis=1
+    )
+    v_ot = tc - bp.eps * ent
+    row_m = jax.vmap(lambda x, r: jax.ops.segment_sum(x, r, num_segments=n))(t_e, rows)
+    col_m = jax.vmap(lambda x, c: jax.ops.segment_sum(x, c, num_segments=m))(t_e, cols)
+    kl_r = jax.vmap(kl_divergence)(row_m, bp.a)
+    kl_c = jax.vmap(kl_divergence)(col_m, bp.b)
+    v_uot = tc + bp.lam * (kl_r + kl_c) - bp.eps * ent
+    value = jnp.where(bp.is_balanced, v_ot, v_uot)
+    return BatchedResult(u, v, t, err, value, rows, cols, vals, nnz)

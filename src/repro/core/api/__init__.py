@@ -2,12 +2,22 @@
 
     from repro.core import Geometry, OTProblem, solve
 
-    geom = Geometry.from_points(x)            # K/logK lazily cached per eps
+    geom = Geometry.from_points(x)            # K/logK LRU-cached per eps
     sol = solve(OTProblem(geom, a, b, eps=0.1), method="spar_sink_coo",
                 key=jax.random.PRNGKey(0), s=8 * s0(n))
     sol.value        # entropic objective estimate
     sol.plan()       # SparsePlan — O(cap), never densified implicitly
     sol.marginals()  # O(cap) row/col sums
+
+Solving many problems? The batch engine executes B problems per dispatch
+(one jit'd program per shape bucket) and returns the same `Solution`s —
+bitwise-reproducible against per-problem ``solve()`` for the same keys:
+
+    from repro.batch import BucketedExecutor
+
+    executor = BucketedExecutor()             # mixed OT/UOT, mixed sizes OK
+    sols = executor.solve_batch(problems, method="spar_sink_coo",
+                                keys=keys, s=8 * s0(n))
 """
 from repro.core.api.geometry import Geometry
 from repro.core.api.problems import OTProblem, UOTProblem

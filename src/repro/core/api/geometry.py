@@ -3,9 +3,10 @@
 A `Geometry` wraps a cost matrix (given directly, built from point clouds,
 or built from a WFR pixel grid) and **lazily** materializes the Gibbs
 kernel ``K = exp(-C/eps)`` / ``log K = -C/eps`` per regularization ``eps``,
-caching each materialization so that consumers (solvers, divergences,
-benchmarks) stop exponentiating costs by hand and never build the same
-kernel twice.
+caching each materialization (bounded LRU, ``cache_size`` per
+representation) so that consumers (solvers, divergences, benchmarks) stop
+exponentiating costs by hand and never build the same kernel twice while
+an eps sweep still has bounded memory.
 
 Blocked entries (``C = +inf``, e.g. beyond the WFR range ``pi * eta``)
 map to ``K = 0`` / ``log K = -inf`` exactly, matching
@@ -13,6 +14,7 @@ map to ``K = 0`` / ``log K = -inf`` exactly, matching
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Callable
 
 import jax
@@ -49,11 +51,23 @@ class Geometry:
       in ``[0,1]^2`` (the echocardiography setting, paper Sec. 6).
     """
 
-    def __init__(self, cost: jax.Array, *, scale: jax.Array | float = 1.0):
+    #: default per-representation kernel cache bound (see cache_size below)
+    DEFAULT_CACHE_SIZE = 8
+
+    def __init__(
+        self,
+        cost: jax.Array,
+        *,
+        scale: jax.Array | float = 1.0,
+        cache_size: int | None = None,
+    ):
         self.cost = jnp.asarray(cost)
         self.scale = scale  # cost units per stored unit (see normalized())
-        self._kernels: dict[float, jax.Array] = {}
-        self._log_kernels: dict[float, jax.Array] = {}
+        self.cache_size = (
+            self.DEFAULT_CACHE_SIZE if cache_size is None else cache_size
+        )
+        self._kernels: "OrderedDict[float, jax.Array]" = OrderedDict()
+        self._log_kernels: "OrderedDict[float, jax.Array]" = OrderedDict()
 
     # ---------------------------------------------------------------- ctors
 
@@ -117,30 +131,34 @@ class Geometry:
 
     # ---------------------------------------------------------------- lazy kernels
     #
-    # The cache holds one n x m array per (eps, representation) requested and
-    # is never evicted automatically: anything referencing this Geometry
-    # (problems, Solutions via `solution.problem.geom`) keeps every cached
-    # kernel reachable. Sweeping many eps values on one long-lived Geometry?
-    # Call `clear_cache()` between sweep points to bound memory.
+    # The cache holds at most ``cache_size`` n x m arrays per representation
+    # (kernel / log-kernel), LRU-evicted beyond that — an eps sweep on a
+    # long-lived Geometry now has bounded memory instead of pinning one
+    # array per sweep point for the Geometry's lifetime. `clear_cache()`
+    # still drops everything eagerly (e.g. before a checkpoint).
 
     def clear_cache(self) -> None:
         """Drop all cached kernels (they rebuild lazily on next access)."""
         self._kernels.clear()
         self._log_kernels.clear()
 
-    def kernel(self, eps: float) -> jax.Array:
-        """``K = exp(-C/eps)``, materialized once per ``eps`` and cached."""
+    def _cached(self, cache: "OrderedDict", eps: float, build) -> jax.Array:
         key = float(eps)
-        if key not in self._kernels:
-            self._kernels[key] = gibbs_kernel(self.cost, eps)
-        return self._kernels[key]
+        if key in cache:
+            cache.move_to_end(key)
+            return cache[key]
+        out = cache[key] = build(self.cost, eps)
+        while len(cache) > self.cache_size:
+            cache.popitem(last=False)
+        return out
+
+    def kernel(self, eps: float) -> jax.Array:
+        """``K = exp(-C/eps)``, materialized once per ``eps`` and LRU-cached."""
+        return self._cached(self._kernels, eps, gibbs_kernel)
 
     def log_kernel(self, eps: float) -> jax.Array:
-        """``log K = -C/eps`` (``-inf`` where blocked), cached per ``eps``."""
-        key = float(eps)
-        if key not in self._log_kernels:
-            self._log_kernels[key] = log_gibbs_kernel(self.cost, eps)
-        return self._log_kernels[key]
+        """``log K = -C/eps`` (``-inf`` where blocked), LRU-cached per ``eps``."""
+        return self._cached(self._log_kernels, eps, log_gibbs_kernel)
 
     def __repr__(self) -> str:
         n, m = self.shape

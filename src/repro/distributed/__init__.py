@@ -3,6 +3,7 @@ from repro.distributed.sharding import (
     batch_specs,
     decode_state_specs,
     dp_axes,
+    leading_axis_specs,
     named,
     param_specs,
     tp_axis,
@@ -12,6 +13,7 @@ __all__ = [
     "batch_specs",
     "decode_state_specs",
     "dp_axes",
+    "leading_axis_specs",
     "named",
     "param_specs",
     "tp_axis",

@@ -18,6 +18,7 @@ left unsharded rather than relying on GSPMD padding).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -29,6 +30,7 @@ __all__ = [
     "param_specs",
     "batch_specs",
     "decode_state_specs",
+    "leading_axis_specs",
     "named",
     "active_mesh",
     "constrain",
@@ -190,6 +192,22 @@ def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_abstract):
         return P(*([None] * len(shape)))
 
     return jax.tree_util.tree_map_with_path(rule, batch_abstract)
+
+
+def leading_axis_specs(mesh: Mesh, tree):
+    """PartitionSpec pytree sharding each leaf's *leading* dim over the DP
+    axes where divisible (replicated otherwise). The data-parallel fan-out
+    rule for pure batch pytrees — `repro.batch.BucketedExecutor` uses it to
+    spread the batch axis of a `BatchedProblem` across the mesh."""
+    dp = dp_axes(mesh)
+
+    def rule(leaf):
+        shape = jnp.shape(leaf)
+        if len(shape) >= 1 and _divisible(shape[0], mesh, dp):
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map(rule, tree)
 
 
 def decode_state_specs(cfg: ModelConfig, mesh: Mesh, state_abstract, batch: int):

@@ -6,6 +6,9 @@
 * ``ref``            — oracles used by the kernel test sweeps
 """
 from repro.kernels.ops import (
+    batched_block_ell_matvec,
+    batched_coo_matvec,
+    batched_coo_rmatvec,
     block_ell_matvec,
     fused_sinkhorn_solve,
     online_lse,
@@ -13,6 +16,9 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
+    "batched_block_ell_matvec",
+    "batched_coo_matvec",
+    "batched_coo_rmatvec",
     "block_ell_matvec",
     "fused_sinkhorn_solve",
     "online_lse",

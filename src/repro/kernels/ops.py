@@ -20,6 +20,9 @@ __all__ = [
     "online_matvec",
     "online_lse",
     "block_ell_matvec",
+    "batched_block_ell_matvec",
+    "batched_coo_matvec",
+    "batched_coo_rmatvec",
     "fused_sinkhorn_solve",
     "lru_scan",
 ]
@@ -117,6 +120,68 @@ def block_ell_matvec(
         vals, col_idx, v.astype(jnp.float32).reshape(-1, bk), interpret=interpret
     )
     return out.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Batched sparse mat-vec entry points (the repro.batch execution engine)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_block_ell_matvec(
+    vals: jax.Array,  # (B, nrb, maxb, Bk, Bk)
+    col_idx: jax.Array,  # (B, nrb, maxb) int32
+    v: jax.Array,  # (B, n_cols)
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """B independent block-ELL sketch mat-vecs in ONE pallas_call.
+
+    The batch axis is folded into the row-block grid dimension (column ids
+    get a per-element block offset), so the single-sketch kernel serves the
+    whole batch without a vmap-of-pallas lowering. Returns (B, n_rows).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    bsz, nrb, maxb, bk, _ = vals.shape
+    ncb = v.shape[-1] // bk
+    offs = (jnp.arange(bsz, dtype=jnp.int32) * ncb)[:, None, None]
+    ci = (col_idx.astype(jnp.int32) + offs).reshape(bsz * nrb, maxb)
+    out = _be.block_ell_matvec_call(
+        vals.reshape(bsz * nrb, maxb, bk, bk),
+        ci,
+        v.astype(jnp.float32).reshape(bsz * ncb, bk),
+        interpret=interpret,
+    )
+    return out.reshape(bsz, nrb * bk)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def batched_coo_matvec(
+    rows: jax.Array, vals: jax.Array, v_gathered: jax.Array, *, n: int | None = None
+) -> jax.Array:
+    """B independent padded-COO mat-vec reductions as one flat segment-sum.
+
+    ``rows`` is (B, cap) per-element row ids; ``v_gathered`` is the already
+    gathered right factor ``take_along_axis(v, cols, 1)`` (callers own the
+    gather so the transpose direction reuses this same reduction). Disjoint
+    per-element segments keep results bitwise those of B separate
+    `repro.core.sparsify.coo_matvec` calls. Returns (B, n).
+    """
+    bsz, _ = rows.shape
+    if n is None:
+        raise TypeError("batched_coo_matvec requires n (static output width)")
+    seg = (rows + (jnp.arange(bsz, dtype=jnp.int32) * n)[:, None]).ravel()
+    out = jax.ops.segment_sum(
+        (vals * v_gathered).ravel(), seg, num_segments=bsz * n
+    )
+    return out.reshape(bsz, n)
+
+
+def batched_coo_rmatvec(
+    cols: jax.Array, vals: jax.Array, u_gathered: jax.Array, *, m: int | None = None
+) -> jax.Array:
+    """Transpose counterpart of `batched_coo_matvec` (segment over columns)."""
+    return batched_coo_matvec(cols, vals, u_gathered, n=m)
 
 
 # ---------------------------------------------------------------------------

@@ -8,21 +8,24 @@ import jax
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    # axis_types landed after jax 0.4.x; Auto is the default there anyway,
+    # so omit the kwarg on versions that predate jax.sharding.AxisType.
+    if hasattr(jax.sharding, "AxisType"):
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CI-sized sharding tests (host devices)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"), axis_types=_auto(3)
-        )
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,285 @@
+"""OT serving driver: a microbatching request queue over `BucketedExecutor`.
+
+  PYTHONPATH=src python -m repro.launch.serve_ot \
+      --requests 64 --max-batch 16 --method spar_sink_coo --deadline-ms 20
+
+Requests (one OT/UOT problem each) land on a queue; the dispatch loop
+collects up to ``max_batch`` of them — or whatever has arrived when the
+oldest waiting request hits its batching deadline — groups them by
+(method, options), and solves each group as one `BucketedExecutor`
+dispatch. Every request resolves to an ordinary `Solution` (O(cap)
+`SparsePlan` for sketch methods) through a `concurrent.futures.Future`.
+
+The CLI drives the server with synthetic mixed OT/UOT traffic (a few
+support sizes, so a handful of shape buckets) and prints throughput,
+batch-occupancy, and compile-cache statistics; ``--serial`` times the same
+request stream as per-problem ``solve()`` calls for comparison.
+"""
+from __future__ import annotations
+
+import argparse
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batch import BucketedExecutor
+from repro.core import Geometry, OTProblem, UOTProblem, s0, solve
+from repro.core.api.solution import Solution
+
+__all__ = ["OTRequest", "OTServer"]
+
+
+@dataclass
+class OTRequest:
+    """One problem + solver options awaiting dispatch."""
+
+    problem: OTProblem
+    method: str
+    key: jax.Array | None
+    opts: dict
+    future: "Future[Solution]" = field(default_factory=Future)
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+class OTServer:
+    """Microbatching front end: collect -> bucket -> one batched dispatch.
+
+    ``deadline_s`` bounds how long the oldest queued request may wait for
+    batch-mates; a full ``max_batch`` dispatches immediately. Requests with
+    different (method, options) never share a dispatch (options are part of
+    the executor's compile key anyway).
+    """
+
+    def __init__(
+        self,
+        executor: BucketedExecutor | None = None,
+        *,
+        max_batch: int = 16,
+        deadline_s: float = 0.02,
+    ):
+        self.executor = executor or BucketedExecutor()
+        self.max_batch = max_batch
+        self.deadline_s = deadline_s
+        self._queue: "queue.Queue[OTRequest | None]" = queue.Queue()
+        self._thread: threading.Thread | None = None
+        self.batches_dispatched = 0
+        self.requests_served = 0
+        self._latencies: list[float] = []
+
+    # ----------------------------------------------------------- lifecycle
+
+    def start(self) -> "OTServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain the queue, then stop the dispatch thread."""
+        if self._thread is None:
+            return
+        self._queue.put(None)
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "OTServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -------------------------------------------------------------- submit
+
+    def submit(
+        self,
+        problem: OTProblem,
+        *,
+        method: str = "spar_sink_coo",
+        key: jax.Array | None = None,
+        **opts,
+    ) -> "Future[Solution]":
+        """Enqueue one problem; resolves to its `Solution` after dispatch."""
+        req = OTRequest(problem, method, key, opts)
+        self._queue.put(req)
+        return req.future
+
+    # ------------------------------------------------------------ dispatch
+
+    def _collect(self) -> list[OTRequest] | None:
+        """Block for the next request, then gather batch-mates until the
+        batch is full or the first request's deadline passes. Already-queued
+        requests are drained greedily even past the deadline — when the
+        server falls behind, batches fill instead of degenerating to size 1.
+        Returns None on the stop sentinel."""
+        first = self._queue.get()
+        if first is None:
+            return None
+        batch = [first]
+        deadline = first.t_submit + self.deadline_s
+        while len(batch) < self.max_batch:
+            timeout = deadline - time.perf_counter()
+            try:
+                nxt = (
+                    self._queue.get_nowait()
+                    if timeout <= 0
+                    else self._queue.get(timeout=timeout)
+                )
+            except queue.Empty:
+                break
+            if nxt is None:
+                self._queue.put(None)  # keep the sentinel for the main loop
+                break
+            batch.append(nxt)
+        return batch
+
+    def _loop(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            # group by (method, opts, has-key): only identical programs share
+            # a dispatch, and a keyless request can't poison a keyed group
+            # (it fails alone with the executor's clear missing-keys error)
+            groups: dict[tuple, list[OTRequest]] = {}
+            for r in batch:
+                groups.setdefault(
+                    (r.method, tuple(sorted(r.opts.items())), r.key is not None),
+                    [],
+                ).append(r)
+            for (method, _, _), reqs in groups.items():
+                self._dispatch(method, reqs)
+
+    def _dispatch(self, method: str, reqs: list[OTRequest]) -> None:
+        try:
+            keys = None
+            if all(r.key is not None for r in reqs):
+                keys = [r.key for r in reqs]
+            sols = self.executor.solve_batch(
+                [r.problem for r in reqs],
+                method=method,
+                keys=keys,
+                **reqs[0].opts,
+            )
+        except Exception as e:  # noqa: BLE001 — fail the requests, not the loop
+            for r in reqs:
+                r.future.set_exception(e)
+            return
+        now = time.perf_counter()
+        self.batches_dispatched += 1
+        self.requests_served += len(reqs)
+        for r, sol in zip(reqs, sols):
+            self._latencies.append(now - r.t_submit)
+            r.future.set_result(sol)
+
+    # --------------------------------------------------------------- stats
+
+    def reset_stats(self) -> None:
+        """Zero the serving counters (keeps the executor's compile cache)."""
+        self.batches_dispatched = 0
+        self.requests_served = 0
+        self._latencies.clear()
+
+    def stats(self) -> dict:
+        lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
+        return {
+            "requests": self.requests_served,
+            "batches": self.batches_dispatched,
+            "mean_batch": self.requests_served / max(self.batches_dispatched, 1),
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+            "compiles": self.executor.compile_count,
+        }
+
+
+# --------------------------------------------------------------------------
+# CLI: synthetic traffic generator
+# --------------------------------------------------------------------------
+
+
+def _make_request_problems(n_requests: int, sizes, seed: int):
+    rng = np.random.default_rng(seed)
+    problems = []
+    for i in range(n_requests):
+        n = int(rng.choice(sizes))
+        x = jnp.asarray(rng.uniform(size=(n, 3)))
+        a = jnp.asarray(rng.dirichlet(np.ones(n)))
+        b = jnp.asarray(rng.dirichlet(np.ones(n)))
+        geom = Geometry.from_points(x, normalize=True)
+        if i % 2:
+            problems.append(UOTProblem(geom, a * 5.0, b * 3.0, 0.1, lam=0.5))
+        else:
+            problems.append(OTProblem(geom, a, b, 0.1))
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--deadline-ms", type=float, default=20.0)
+    ap.add_argument("--method", default="spar_sink_coo")
+    ap.add_argument("--sizes", default="96,128,200,256")
+    ap.add_argument("--s-mult", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--serial", action="store_true",
+                    help="also time the stream as per-problem solve() calls")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="include first-dispatch compiles in the timed run")
+    args = ap.parse_args()
+
+    sizes = [int(v) for v in args.sizes.split(",")]
+    problems = _make_request_problems(args.requests, sizes, args.seed)
+    opts: dict = {"max_iter": 2000}
+    if args.method == "spar_sink_coo":
+        opts["s"] = args.s_mult * s0(max(sizes))
+    keys = [jax.random.PRNGKey(i) for i in range(args.requests)]
+
+    server = OTServer(
+        max_batch=args.max_batch, deadline_s=args.deadline_ms / 1e3
+    )
+
+    def run_stream():
+        t0 = time.perf_counter()
+        futures = []
+        for i, p in enumerate(problems):
+            k = keys[i] if args.method == "spar_sink_coo" else None
+            futures.append(server.submit(p, method=args.method, key=k, **opts))
+        values = [float(f.result().value) for f in futures]
+        return values, time.perf_counter() - t0
+
+    with server:
+        if not args.no_warmup:
+            run_stream()  # prime the compile cache (steady-state numbers)
+            server.reset_stats()
+        values, dt = run_stream()
+    st = server.stats()
+    print(f"served {st['requests']} requests in {dt:.2f}s "
+          f"({st['requests'] / dt:.1f} req/s) over {st['batches']} batches "
+          f"(mean occupancy {st['mean_batch']:.1f}, "
+          f"{st['compiles']} compiles)")
+    print(f"latency p50={st['p50_latency_s'] * 1e3:.0f}ms "
+          f"p99={st['p99_latency_s'] * 1e3:.0f}ms; "
+          f"sample values: {np.round(values[:4], 4).tolist()}")
+
+    if args.serial:
+        t0 = time.perf_counter()
+        for i, p in enumerate(problems):
+            kw = dict(opts)
+            if args.method == "spar_sink_coo":
+                kw["key"] = keys[i]
+            solve(p, method=args.method, **kw).block_until_ready()
+        dt_serial = time.perf_counter() - t0
+        print(f"serial loop: {dt_serial:.2f}s "
+              f"({args.requests / dt_serial:.1f} req/s) — "
+              f"batched speedup {dt_serial / dt:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

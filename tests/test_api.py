@@ -263,6 +263,37 @@ def test_geometry_kernel_cache_and_repr():
         Geometry.from_points(jnp.zeros((3, 2)), cost="no_such_cost")
 
 
+def test_geometry_kernel_cache_is_lru_bounded():
+    """An eps sweep must not grow the per-eps cache without limit: at most
+    cache_size kernels stay alive, evicted least-recently-used first."""
+    g = Geometry(jnp.eye(4), cache_size=3)
+    eps_grid = [0.1, 0.2, 0.3]
+    kept = [g.kernel(e) for e in eps_grid]
+    assert len(g._kernels) == 3
+    assert g.kernel(0.1) is kept[0]  # hit refreshes recency: 0.2 is now LRU
+    g.kernel(0.4)  # evicts 0.2
+    assert len(g._kernels) == 3
+    assert set(g._kernels) == {0.1, 0.3, 0.4}
+    assert g.kernel(0.1) is kept[0]  # survivors still cached (same object)
+    # log-kernel cache is bounded independently
+    for e in (0.1, 0.2, 0.3, 0.4, 0.5):
+        g.log_kernel(e)
+    assert len(g._log_kernels) == 3
+
+
+def test_geometry_clear_cache():
+    g = Geometry(jnp.eye(4))
+    k1 = g.kernel(0.5)
+    lk1 = g.log_kernel(0.5)
+    assert len(g._kernels) == 1 and len(g._log_kernels) == 1
+    g.clear_cache()
+    assert len(g._kernels) == 0 and len(g._log_kernels) == 0
+    # rebuilds lazily to equal values (fresh arrays, not the old objects)
+    assert g.kernel(0.5) is not k1
+    np.testing.assert_array_equal(np.asarray(g.kernel(0.5)), np.asarray(k1))
+    np.testing.assert_array_equal(np.asarray(g.log_kernel(0.5)), np.asarray(lk1))
+
+
 # --------------------------------------------------------------------------
 # API surface drift guard (tier-1 wrapper around tools/check_api_surface.py)
 # --------------------------------------------------------------------------

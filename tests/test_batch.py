@@ -1,0 +1,306 @@
+"""Batched OT execution engine (ISSUE 2 acceptance): a mixed B=16 OT+UOT
+batch through `BucketedExecutor` matches per-problem `solve()` (bitwise
+sketches/scalings for spar_sink given the same per-problem keys), padded
+rows carry zero mass, and same-bucket dispatches never recompile."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.batch import (
+    BatchedProblem,
+    BucketedExecutor,
+    batchable_methods,
+    batched_coo_sketch,
+    bucket_shape,
+    get_batched_solver,
+    group_by_bucket,
+)
+from repro.core import Geometry, OTProblem, UOTProblem, build_coo_sketch, s0, solve
+from repro.core.api.solution import SparsePlan
+
+EPS = 0.1
+SIZES = (40, 64, 100, 128)  # -> buckets (64, 64), (128, 128)
+
+
+def _mixed_problems(B=16, sizes=SIZES, seed=0):
+    """B problems alternating balanced OT / unbalanced UOT, mixed sizes."""
+    rng = np.random.default_rng(seed)
+    problems = []
+    for i in range(B):
+        n = int(sizes[i % len(sizes)])
+        x = jnp.asarray(rng.uniform(size=(n, 3)))
+        a = jnp.asarray(rng.dirichlet(np.ones(n)))
+        b = jnp.asarray(rng.dirichlet(np.ones(n)))
+        geom = Geometry.from_points(x, normalize=True)
+        if i % 2:
+            problems.append(UOTProblem(geom, a * 5.0, b * 3.0, EPS, lam=0.5))
+        else:
+            problems.append(OTProblem(geom, a, b, EPS))
+    return problems
+
+
+@pytest.fixture(scope="module")
+def mixed16():
+    return _mixed_problems(16)
+
+
+@pytest.fixture(scope="module")
+def keys16():
+    return [jax.random.PRNGKey(100 + i) for i in range(16)]
+
+
+# --------------------------------------------------------------------------
+# Acceptance: executor vs per-problem solve()
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["dense", "log"])
+def test_executor_matches_solve_dense_log(mixed16, method):
+    ex = BucketedExecutor()
+    sols = ex.solve_batch(mixed16, method=method, tol=1e-9, max_iter=5000)
+    for p, sol in zip(mixed16, sols):
+        ref = solve(p, method=method, tol=1e-9, max_iter=5000)
+        rel = abs(float(sol.value) - float(ref.value)) / abs(float(ref.value))
+        assert rel < 1e-5, (method, p.shape, rel)
+        assert int(sol.result.n_iter) == int(ref.result.n_iter)
+        np.testing.assert_allclose(
+            np.asarray(sol.result.u), np.asarray(ref.result.u),
+            rtol=1e-10, atol=1e-12,
+        )
+        assert sol.method == method and sol.problem is p
+
+
+def test_executor_spar_sink_bitwise(mixed16, keys16):
+    """Same per-problem PRNG keys => bitwise identical sketches, scalings,
+    iteration counts and O(cap) plans vs per-problem solve()."""
+    s = 8 * s0(128)
+    ex = BucketedExecutor()
+    sols = ex.solve_batch(
+        mixed16, method="spar_sink_coo", keys=keys16, s=s, tol=1e-9, max_iter=5000
+    )
+    for p, key, sol in zip(mixed16, keys16, sols):
+        ref = solve(p, method="spar_sink_coo", key=key, s=s, tol=1e-9, max_iter=5000)
+        rel = abs(float(sol.value) - float(ref.value)) / abs(float(ref.value))
+        assert rel < 1e-5, (p.shape, rel)
+        assert bool(jnp.all(sol.result.u == ref.result.u))
+        assert bool(jnp.all(sol.result.v == ref.result.v))
+        assert int(sol.result.n_iter) == int(ref.result.n_iter)
+        assert int(sol.nnz) == int(ref.nnz)
+        plan, rplan = sol.plan(), ref.plan()
+        assert isinstance(plan, SparsePlan) and plan.n == p.shape[0]
+        assert bool(jnp.all(plan.rows == rplan.rows))
+        assert bool(jnp.all(plan.cols == rplan.cols))
+        assert bool(jnp.all(plan.vals == rplan.vals))
+
+
+def test_padded_rows_carry_zero_mass(mixed16):
+    """Mass-0 padding is inert: padded scalings stay 0 (dense) / -inf (log),
+    and no plan mass ever lands on a padded row or column."""
+    bp = BatchedProblem.from_problems(mixed16, bucket=(128, 128))
+    rm, cm = bp.row_mask(), bp.col_mask()
+
+    br = get_batched_solver("dense")(bp, None, tol=1e-9, max_iter=5000)
+    assert bool(jnp.all(jnp.where(rm, br.u, 1.0) > 0))  # real rows active
+    assert bool(jnp.all(jnp.where(rm, 0.0, br.u) == 0.0))  # padded rows zero
+    assert bool(jnp.all(jnp.where(cm, 0.0, br.v) == 0.0))
+    T = br.u[:, :, None] * bp.kernel() * br.v[:, None, :]
+    pad_mass = jnp.where(rm[:, :, None] & cm[:, None, :], 0.0, T)
+    assert float(jnp.max(jnp.abs(pad_mass))) == 0.0
+
+    br = get_batched_solver("log")(bp, None, tol=1e-9, max_iter=5000)
+    assert bool(jnp.all(jnp.isneginf(jnp.where(rm, -jnp.inf, br.u))))
+    assert bool(jnp.all(jnp.isneginf(jnp.where(cm, -jnp.inf, br.v))))
+
+
+def test_compile_cache_no_recompilation_same_bucket(mixed16, keys16):
+    """Dispatching the same (bucket, method, opts) again must not retrace."""
+    s = 8 * s0(128)
+    ex = BucketedExecutor()
+    ex.solve_batch(mixed16, method="spar_sink_coo", keys=keys16, s=s, max_iter=2000)
+    first = ex.compile_count
+    assert first == 2  # one program per shape bucket: (64,64) and (128,128)
+    ex.solve_batch(mixed16, method="spar_sink_coo", keys=keys16, s=s, max_iter=2000)
+    assert ex.compile_count == first  # same buckets: cache hits only
+    # a permuted request stream lands in the same bucket programs
+    perm = mixed16[::-1]
+    ex.solve_batch(perm, method="spar_sink_coo", keys=keys16, s=s, max_iter=2000)
+    assert ex.compile_count == first
+    # a new method does compile
+    ex.solve_batch(mixed16, method="dense", max_iter=2000)
+    assert ex.compile_count == first + 2
+
+
+def test_compile_cache_lru_eviction(mixed16):
+    ex = BucketedExecutor(cache_size=1)
+    small = [p for p in mixed16 if p.shape[0] <= 64]
+    big = [p for p in mixed16 if p.shape[0] > 64]
+    ex.solve_batch(small, method="dense", max_iter=500)
+    ex.solve_batch(big, method="dense", max_iter=500)  # evicts the small program
+    ex.solve_batch(small, method="dense", max_iter=500)  # must retrace
+    assert ex.compile_count == 3
+    assert len(ex._cache) == 1
+
+
+# --------------------------------------------------------------------------
+# Problems / bucketing units
+# --------------------------------------------------------------------------
+
+
+def test_bucket_shape_and_grouping(mixed16):
+    assert bucket_shape(40, 40) == (64, 64)
+    assert bucket_shape(64, 100) == (64, 128)
+    assert bucket_shape(129, 5) == (256, 64)
+    groups = group_by_bucket(mixed16)
+    assert set(groups) == {(64, 64), (128, 128)}
+    assert sorted(i for idxs in groups.values() for i in idxs) == list(range(16))
+
+
+def test_batched_problem_encodes_mixed_ot_uot(mixed16):
+    bp = BatchedProblem.from_problems(mixed16)
+    assert bp.batch == 16
+    bal = np.asarray(bp.is_balanced)
+    assert bal.tolist() == [i % 2 == 0 for i in range(16)]
+    fe = np.asarray(bp.fe)
+    assert np.all(fe[::2] == 1.0)
+    assert np.allclose(fe[1::2], 0.5 / (0.5 + EPS))
+    # padding: kernel exactly 0, marginals exactly 0 beyond true sizes
+    K = np.asarray(bp.kernel())
+    rm, cm = np.asarray(bp.row_mask()), np.asarray(bp.col_mask())
+    assert np.all(K[~rm[:, :, None] & np.ones_like(K, bool)] == 0.0)
+    assert np.all(np.asarray(bp.a)[~rm] == 0.0)
+    assert np.all(np.asarray(bp.b)[~cm] == 0.0)
+
+
+def test_in_jit_sketch_bitwise_for_exact_fit():
+    """`batched_coo_sketch` (fully in-jit, lax.map) draws the per-problem
+    bits when problems exactly fill the bucket."""
+    problems = _mixed_problems(4, sizes=(64,), seed=3)
+    keys = [jax.random.PRNGKey(i) for i in range(4)]
+    s = 8 * s0(64)
+    bp = BatchedProblem.from_problems(problems, bucket=(64, 64))
+    sk = jax.jit(lambda bp, k: batched_coo_sketch(bp, k, s))(bp, jnp.stack(keys))
+    for i, (p, key) in enumerate(zip(problems, keys)):
+        ref = build_coo_sketch(p, key, s, cap=sk.cap)
+        # inclusion draws are bitwise (same PRNG bits, same shapes) ...
+        assert bool(jnp.all(sk.rows[i] == ref.rows))
+        assert bool(jnp.all(sk.cols[i] == ref.cols))
+        assert int(sk.nnz[i]) == int(ref.nnz)
+        # ... values agree up to jit fusion of the K / p* arithmetic
+        np.testing.assert_allclose(
+            np.asarray(sk.vals[i]), np.asarray(ref.vals), rtol=1e-12
+        )
+
+
+# --------------------------------------------------------------------------
+# Executor error paths
+# --------------------------------------------------------------------------
+
+
+def test_executor_error_paths(mixed16):
+    ex = BucketedExecutor()
+    assert "spar_sink_coo" in batchable_methods()
+    with pytest.raises(KeyError, match="batchable"):
+        ex.solve_batch(mixed16, method="no_such_method")
+    with pytest.raises(TypeError, match="keys"):
+        ex.solve_batch(mixed16, method="spar_sink_coo", s=100.0)
+    with pytest.raises(TypeError, match="'s'"):
+        ex.solve_batch(
+            mixed16, method="spar_sink_coo",
+            keys=[jax.random.PRNGKey(i) for i in range(16)],
+        )
+
+
+# --------------------------------------------------------------------------
+# Serving driver (microbatching queue over the executor)
+# --------------------------------------------------------------------------
+
+
+def test_serve_ot_microbatching(mixed16, keys16):
+    from repro.launch.serve_ot import OTServer
+
+    s = 8 * s0(128)
+    with OTServer(max_batch=8, deadline_s=0.05) as server:
+        futures = [
+            server.submit(p, method="spar_sink_coo", key=k, s=s, max_iter=2000)
+            for p, k in zip(mixed16, keys16)
+        ]
+        sols = [f.result(timeout=300) for f in futures]
+    st = server.stats()
+    assert st["requests"] == 16
+    assert 1 <= st["batches"] <= 16
+    for p, key, sol in zip(mixed16, keys16, sols):
+        ref = solve(p, method="spar_sink_coo", key=key, s=s, max_iter=2000)
+        assert bool(jnp.all(sol.result.u == ref.result.u)), p.shape
+        np.testing.assert_allclose(float(sol.value), float(ref.value), rtol=1e-12)
+
+
+def test_serve_ot_propagates_solver_errors(mixed16):
+    from repro.launch.serve_ot import OTServer
+
+    with OTServer(max_batch=4, deadline_s=0.01) as server:
+        fut = server.submit(mixed16[0], method="no_such_method")
+        with pytest.raises(KeyError):
+            fut.result(timeout=60)
+
+
+def test_serve_ot_keyless_request_fails_alone(mixed16):
+    """A spar_sink request missing its PRNG key must not poison a keyed
+    request sharing the batching window: they dispatch separately."""
+    from repro.launch.serve_ot import OTServer
+
+    s = 8 * s0(64)
+    small = [p for p in mixed16 if p.shape[0] <= 64]
+    with OTServer(max_batch=4, deadline_s=0.2) as server:
+        good = server.submit(
+            small[0], method="spar_sink_coo", key=jax.random.PRNGKey(0),
+            s=s, max_iter=500,
+        )
+        bad = server.submit(small[1], method="spar_sink_coo", s=s, max_iter=500)
+        sol = good.result(timeout=120)
+        with pytest.raises(TypeError, match="keys"):
+            bad.result(timeout=120)
+    assert np.isfinite(float(sol.value))
+
+
+# --------------------------------------------------------------------------
+# Device fan-out: batch axis sharded over a host-device mesh (subprocess so
+# smoke tests elsewhere keep seeing one device — same pattern as
+# tests/test_distributed.py)
+# --------------------------------------------------------------------------
+
+
+def test_executor_shards_batch_axis_over_mesh():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    script = """
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, numpy as np
+from repro.batch import BucketedExecutor
+from repro.core import solve
+from repro.launch.mesh import make_test_mesh
+from tests.test_batch import _mixed_problems
+
+mesh = make_test_mesh(4, 2)
+problems = _mixed_problems(8, sizes=(64,), seed=5)
+ex = BucketedExecutor(mesh=mesh)
+sols = ex.solve_batch(problems, method="dense", tol=1e-9, max_iter=2000)
+for p, sol in zip(problems, sols):
+    ref = solve(p, method="dense", tol=1e-9, max_iter=2000)
+    rel = abs(float(sol.value) - float(ref.value)) / abs(float(ref.value))
+    assert rel < 1e-5, rel
+print("OK", len(jax.devices()))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + repo
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=420, env=env, cwd=repo,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
+    assert "OK 8" in out.stdout

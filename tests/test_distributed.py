@@ -194,8 +194,8 @@ from repro import configs
 from repro.launch import specs as specs_lib
 from repro.launch.dryrun import collective_stats
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh(2, 2, pod=2)
 cfg = configs.get("olmoe_1b_7b:smoke")
 with mesh:
     args, in_sh, donate = specs_lib.abstract_serve_args(cfg, "decode_32k", mesh)

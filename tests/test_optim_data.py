@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.data import TokenPipeline, make_measures, synth_echo_video, wfr_eta_for_density

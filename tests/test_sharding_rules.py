@@ -14,13 +14,12 @@ from repro.models import init_decode_state, init_params, loss_fn
 def _mesh2x2():
     # 1-device-safe fake mesh construction is not possible; these tests use
     # spec construction only (no placement), so a 1x1 mesh suffices when only
-    # one device exists.
-    n = len(jax.devices())
-    if n >= 4:
-        return jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # one device exists. make_test_mesh handles jax versions without AxisType.
+    from repro.launch.mesh import make_test_mesh
+
+    if len(jax.devices()) >= 4:
+        return make_test_mesh(2, 2)
+    return make_test_mesh(1, 1)
 
 
 def test_decode_state_specs_find_batch_dim_vlm():

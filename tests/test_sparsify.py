@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; CI installs it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gibbs_kernel, normalize_cost, squared_euclidean_cost
