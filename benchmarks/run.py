@@ -4,9 +4,10 @@ Emits ``name,us_per_call,derived`` CSV on stdout (progress on stderr).
 Full-size variants: ``python -m benchmarks.bench_<x> --full``.
 
 ``--emit-json [DIR]`` runs the machine-readable perf suites (batched
-dispatch + time-vs-n) and writes standardized ``BENCH_batch.json`` /
-``BENCH_time.json`` (schema ``repro-bench-v1``: method, n, B, wall-time,
-RMAE per row) so the perf trajectory stays comparable across PRs.
+dispatch + time-vs-n + matrix-free scaling) and writes standardized
+``BENCH_batch.json`` / ``BENCH_time.json`` / ``BENCH_scale.json``
+(schema ``repro-bench-v1``: method, n, B, wall-time, RMAE per row) so the
+perf trajectory stays comparable across PRs.
 """
 from __future__ import annotations
 
@@ -17,7 +18,7 @@ import time
 
 
 def _emit_json(out_dir: str) -> None:
-    from benchmarks import bench_batch, bench_time, common
+    from benchmarks import bench_batch, bench_scale, bench_time, common
 
     os.makedirs(out_dir, exist_ok=True)
     print(f"--- batch (JSON -> {out_dir}) ---", file=sys.stderr)
@@ -26,6 +27,9 @@ def _emit_json(out_dir: str) -> None:
     print("--- time vs n (JSON) ---", file=sys.stderr)
     bench_time.run()
     common.write_json(os.path.join(out_dir, "BENCH_time.json"), "time")
+    print("--- matrix-free scale sweep (JSON) ---", file=sys.stderr)
+    bench_scale.run()
+    common.write_json(os.path.join(out_dir, "BENCH_scale.json"), "scale")
 
 
 def main() -> None:
@@ -52,6 +56,7 @@ def main() -> None:
         bench_rmae_vs_n,
         bench_roofline,
         bench_router,
+        bench_scale,
         bench_time,
     )
 
@@ -63,6 +68,8 @@ def main() -> None:
             patterns=("C1",), regimes=("R2",), n=500, mults=(2, 8), n_rep=4)),
         ("fig4 (RMAE vs n)", lambda: bench_rmae_vs_n.run(ns=(400, 800), n_rep=4)),
         ("fig5 (time vs n)", lambda: bench_time.run(ns=(800, 1600, 3200))),
+        ("scale (matrix-free vs dense sketch)", lambda: bench_scale.run(
+            ns=(2 ** 10, 2 ** 11, 2 ** 12), n_rep=2)),
         ("fig11 (barycenters)", lambda: bench_barycenter.run(
             n=400, eps_grid=(0.05,), mults=(5, 20), n_rep=4)),
         ("table1 (echo ED prediction)", lambda: bench_echo.run(

@@ -26,6 +26,7 @@ from repro.batch.solvers import (
     batched_coo_sketch,
     batched_log_loop,
     batched_scaling_loop,
+    build_batched_mf_sketch,
     build_batched_sketch,
     get_batched_solver,
     register_batched_solver,
@@ -41,6 +42,7 @@ __all__ = [
     "batched_log_loop",
     "batched_scaling_loop",
     "bucket_shape",
+    "build_batched_mf_sketch",
     "build_batched_sketch",
     "get_batched_solver",
     "group_by_bucket",

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.batch.problems import BatchedProblem, bucket_shape, group_by_bucket
 from repro.batch.solvers import (
     BatchedResult,
+    build_batched_mf_sketch,
     build_batched_sketch,
     get_batched_solver,
 )
@@ -43,8 +44,11 @@ from repro.core.sinkhorn import (
 
 __all__ = ["BucketedExecutor"]
 
-_NEEDS_KEY = frozenset({"spar_sink_coo"})
+_NEEDS_KEY = frozenset({"spar_sink_coo", "spar_sink_mf"})
 _LOG_DOMAIN = frozenset({"log"})
+# methods whose batched kernel never reads bp.cost: the batch is assembled
+# without the (B, n, m) array (matrix-free end to end)
+_MATRIX_FREE = frozenset({"spar_sink_mf"})
 
 
 def _next_pow2(v: int) -> int:
@@ -167,13 +171,20 @@ class BucketedExecutor:
             # set, so varying group sizes don't retrace the jit program.
             pad = _next_pow2(len(group)) - len(group)
             bp = BatchedProblem.from_problems(
-                group + [group[-1]] * pad, bucket=bucket
+                group + [group[-1]] * pad,
+                bucket=bucket,
+                materialize_cost=method not in _MATRIX_FREE,
             )
             if sketch_args is not None:
-                # build only the unique sketches (the O(n m) part); pad
-                # slots reuse the last element's arrays instead of redrawing
-                # an identical sketch per slot
-                aux = build_batched_sketch(group, gkeys, *sketch_args)
+                # build only the unique sketches (the O(n m) part — O(s) on
+                # the matrix-free path); pad slots reuse the last element's
+                # arrays instead of redrawing an identical sketch per slot
+                build = (
+                    build_batched_mf_sketch
+                    if method in _MATRIX_FREE
+                    else build_batched_sketch
+                )
+                aux = build(group, gkeys, *sketch_args)
                 if pad:
                     aux = jax.tree_util.tree_map(
                         lambda x: jnp.concatenate(
@@ -214,6 +225,9 @@ class BucketedExecutor:
                 result=res,
                 domain="scaling",
                 nnz=nnz,
+                overflowed=(
+                    br.overflowed[j] if br.overflowed is not None else None
+                ),
                 _plan_thunk=sparse_plan,
             )
         if method in _LOG_DOMAIN:

@@ -79,7 +79,8 @@ class BatchedProblem:
     jit / vmap / device_put directly (bucket shape is carried by the array
     shapes themselves — jit specializes per bucket automatically)."""
 
-    cost: jax.Array  # (B, n, m); +inf on padding and blocked entries
+    cost: jax.Array | None  # (B, n, m); +inf on padding/blocked. None on the
+    #                         matrix-free path (materialize_cost=False)
     a: jax.Array  # (B, n);   0 on padding
     b: jax.Array  # (B, m);   0 on padding
     eps: jax.Array  # (B,)
@@ -101,10 +102,20 @@ class BatchedProblem:
     # -------------------------------------------------------------- ctors
     @classmethod
     def from_problems(
-        cls, problems: Sequence[OTProblem], *, bucket: tuple[int, int] | None = None
+        cls,
+        problems: Sequence[OTProblem],
+        *,
+        bucket: tuple[int, int] | None = None,
+        materialize_cost: bool = True,
     ) -> "BatchedProblem":
         """Pad and stack problems into one batch. All problems must fit the
-        bucket; with ``bucket=None`` the max support sizes are used."""
+        bucket; with ``bucket=None`` the max support sizes are used.
+
+        ``materialize_cost=False`` leaves ``cost = None`` (an empty pytree
+        node): the matrix-free ``spar_sink_mf`` path iterates and evaluates
+        its objective from the sketch alone, so no (B, n, m) array is built
+        — required when the geometries are guarded `PointCloudGeometry`s.
+        ``kernel()``/``log_kernel()`` are unavailable on such a batch."""
         if not problems:
             raise ValueError("empty batch")
         if bucket is None:
@@ -113,12 +124,13 @@ class BatchedProblem:
                 max(p.shape[1] for p in problems),
             )
         n, m = bucket
-        dtype = jnp.result_type(*[p.geom.cost.dtype for p in problems])
+        dtype = jnp.result_type(*[p.geom.dtype for p in problems])
         costs, a_s, b_s, eps_s, lam_s = [], [], [], [], []
         for p in problems:
-            costs.append(
-                _pad_to(_pad_to(p.geom.cost.astype(dtype), n, 0, jnp.inf), m, 1, jnp.inf)
-            )
+            if materialize_cost:
+                costs.append(
+                    _pad_to(_pad_to(p.geom.cost.astype(dtype), n, 0, jnp.inf), m, 1, jnp.inf)
+                )
             a_s.append(_pad_to(p.a.astype(dtype), n, 0))
             b_s.append(_pad_to(p.b.astype(dtype), m, 0))
             eps_s.append(float(p.eps))
@@ -128,7 +140,7 @@ class BatchedProblem:
                 else np.inf
             )
         return cls(
-            cost=jnp.stack(costs),
+            cost=jnp.stack(costs) if materialize_cost else None,
             a=jnp.stack(a_s),
             b=jnp.stack(b_s),
             eps=jnp.asarray(eps_s, dtype),

@@ -51,6 +51,7 @@ __all__ = [
     "batched_coo_sketch",
     "batched_log_loop",
     "batched_scaling_loop",
+    "build_batched_mf_sketch",
     "build_batched_sketch",
     "get_batched_solver",
     "register_batched_solver",
@@ -59,12 +60,21 @@ __all__ = [
 
 class BatchedSketch(NamedTuple):
     """B fixed-cap padded-COO kernel sketches as one array set (the batched
-    `repro.core.sparsify.SparseKernelCOO`; padded slots carry vals == 0)."""
+    `repro.core.sparsify.SparseKernelCOO`; padded slots carry vals == 0).
 
-    rows: jax.Array  # (B, cap) int32
+    ``csort`` is the per-element col-sorted permutation (rows are sorted by
+    construction), so both batched segment-sums run with
+    ``indices_are_sorted=True``. ``cost_e`` carries the gathered raw costs
+    on the matrix-free path (None for dense-sketch builds, which gather
+    from the batched cost instead)."""
+
+    rows: jax.Array  # (B, cap) int32, per-element ascending
     cols: jax.Array  # (B, cap) int32
     vals: jax.Array  # (B, cap)
     nnz: jax.Array  # (B,) int32
+    csort: jax.Array | None = None  # (B, cap) int32
+    overflowed: jax.Array | None = None  # (B,) bool
+    cost_e: jax.Array | None = None  # (B, cap) gathered costs (mf path)
 
     @property
     def cap(self) -> int:
@@ -84,6 +94,7 @@ class BatchedResult(NamedTuple):
     cols: jax.Array | None = None  # (B, cap) int32
     vals: jax.Array | None = None  # (B, cap) sketch kernel values
     nnz: jax.Array | None = None  # (B,) int32
+    overflowed: jax.Array | None = None  # (B,) bool — sketch draw truncated
 
 
 # --------------------------------------------------------------------------
@@ -352,6 +363,33 @@ def build_batched_sketch(
         cols=jnp.stack([sk.cols for sk in sks]),
         vals=jnp.stack([sk.vals for sk in sks]),
         nnz=jnp.stack([sk.nnz for sk in sks]),
+        csort=jnp.stack([sk.csort for sk in sks]),
+        overflowed=jnp.stack([sk.overflowed for sk in sks]),
+    )
+
+
+def build_batched_mf_sketch(
+    problems, keys, s: float, cap: int | None = None
+) -> BatchedSketch:
+    """Stack per-problem **matrix-free** sketches (`build_mf_sketch`): every
+    element's geometry must be a `PointCloudGeometry`, the draw is the
+    factorized O(s log n) sampler at the element's true support shape —
+    bitwise the per-problem ``solve(..., method="spar_sink_mf")`` sketch
+    for the same PRNG key — and the gathered raw costs ride along in
+    ``cost_e`` so the batched solve never touches an (n, m) cost."""
+    from repro.core.api.solvers import build_mf_sketch
+
+    cap = default_cap(s) if cap is None else cap
+    built = [build_mf_sketch(p, k, s, cap=cap) for p, k in zip(problems, keys)]
+    sks = [sk for sk, _ in built]
+    return BatchedSketch(
+        rows=jnp.stack([sk.rows for sk in sks]),
+        cols=jnp.stack([sk.cols for sk in sks]),
+        vals=jnp.stack([sk.vals for sk in sks]),
+        nnz=jnp.stack([sk.nnz for sk in sks]),
+        csort=jnp.stack([sk.csort for sk in sks]),
+        overflowed=jnp.stack([sk.overflowed for sk in sks]),
+        cost_e=jnp.stack([c_e for _, c_e in built]),
     )
 
 
@@ -370,46 +408,59 @@ def batched_coo_sketch(
         K_i = jnp.where(jnp.isinf(cost_i), 0.0, jnp.exp(-cost_i / eps_i))
         probs = _element_probs(cost_i, a_i, b_i, eps_i, lam_i)
         sk = sparsify.sparsify_coo(key_i, K_i, probs, s, cap)
-        return sk.rows, sk.cols, sk.vals, sk.nnz
+        return sk.rows, sk.cols, sk.vals, sk.nnz, sk.csort, sk.overflowed
 
-    rows, cols, vals, nnz = jax.lax.map(
+    rows, cols, vals, nnz, csort, overflowed = jax.lax.map(
         build_one, (bp.cost, bp.a, bp.b, bp.eps, bp.lam, keys)
     )
-    return BatchedSketch(rows, cols, vals, nnz)
+    return BatchedSketch(rows, cols, vals, nnz, csort, overflowed)
 
 
-@register_batched_solver("spar_sink_coo")
-def batched_solve_spar_sink(
+def _batched_sketch_solve(
     bp: BatchedProblem,
     sketch: BatchedSketch,
-    *,
-    tol: float = 1e-6,
-    max_iter: int = 1000,
+    c_e: jax.Array,
+    tol: float,
+    max_iter: int,
 ) -> BatchedResult:
-    """Spar-Sink (paper Alg. 3/4) on a fixed-cap batched COO sketch: two
-    batched segment-sum mat-vecs per iteration, O(cap) objective per element
-    (the batched mirror of ``coo_objective_ot`` / ``coo_objective_uot``)."""
+    """Shared Spar-Sink core (paper Alg. 3/4) on a fixed-cap batched COO
+    sketch: two batched **sorted** segment-sum mat-vecs per iteration
+    (rows are construction-sorted; the transpose direction permutes through
+    ``csort``), O(cap) objective per element from the gathered costs ``c_e``
+    (the batched mirror of ``coo_objective_*_entries``)."""
     _, n, m = bp.shape
-    rows, cols, vals, nnz = sketch
+    rows, cols, vals = sketch.rows, sketch.cols, sketch.vals
+    sorted_ = sketch.csort is not None
     # The flat-segment reduction lives in repro.kernels (one implementation,
     # also the TPU entry point); it is bitwise B per-problem `coo_matvec`s.
     from repro.kernels.ops import batched_coo_matvec, batched_coo_rmatvec
 
+    if sorted_:
+        cols_sorted = jnp.take_along_axis(cols, sketch.csort, axis=1)
+        vals_sorted = jnp.take_along_axis(vals, sketch.csort, axis=1)
+
     def coo_matvec(v):  # (B, m) -> (B, n)
         return batched_coo_matvec(
-            rows, vals, jnp.take_along_axis(v, cols, axis=1), n=n
+            rows, vals, jnp.take_along_axis(v, cols, axis=1), n=n,
+            indices_are_sorted=sorted_,
         )
 
     def coo_rmatvec(u):  # (B, n) -> (B, m)
+        ug = jnp.take_along_axis(u, rows, axis=1)
+        if not sorted_:
+            return batched_coo_rmatvec(cols, vals, ug, m=m)
         return batched_coo_rmatvec(
-            cols, vals, jnp.take_along_axis(u, rows, axis=1), m=m
+            cols_sorted,
+            vals_sorted,
+            jnp.take_along_axis(ug, sketch.csort, axis=1),
+            m=m,
+            indices_are_sorted=True,
         )
 
     u, v, t, err = batched_scaling_loop(
         coo_matvec, coo_rmatvec, bp.a, bp.b, bp.fe, tol=tol, max_iter=max_iter
     )
 
-    c_e = jax.vmap(lambda C, r, c: C[r, c])(bp.cost, rows, cols)
     t_e = (
         jnp.take_along_axis(u, rows, axis=1)
         * vals
@@ -427,4 +478,40 @@ def batched_solve_spar_sink(
     kl_c = jax.vmap(kl_divergence)(col_m, bp.b)
     v_uot = tc + bp.lam * (kl_r + kl_c) - bp.eps * ent
     value = jnp.where(bp.is_balanced, v_ot, v_uot)
-    return BatchedResult(u, v, t, err, value, rows, cols, vals, nnz)
+    return BatchedResult(
+        u, v, t, err, value, rows, cols, vals, sketch.nnz, sketch.overflowed
+    )
+
+
+@register_batched_solver("spar_sink_coo")
+def batched_solve_spar_sink(
+    bp: BatchedProblem,
+    sketch: BatchedSketch,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> BatchedResult:
+    """Spar-Sink on a dense-built batched sketch; costs for the objective
+    are gathered from the batched cost matrices."""
+    c_e = jax.vmap(lambda C, r, c: C[r, c])(bp.cost, sketch.rows, sketch.cols)
+    return _batched_sketch_solve(bp, sketch, c_e, tol, max_iter)
+
+
+@register_batched_solver("spar_sink_mf")
+def batched_solve_spar_sink_mf(
+    bp: BatchedProblem,
+    sketch: BatchedSketch,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> BatchedResult:
+    """Matrix-free batched Spar-Sink: the sketch (from
+    `build_batched_mf_sketch`) carries its own gathered costs, so
+    ``bp.cost`` may be ``None`` (`BatchedProblem.from_problems` with
+    ``materialize_cost=False``) and nothing O(n m) exists anywhere."""
+    if sketch.cost_e is None:
+        raise ValueError(
+            "spar_sink_mf needs a matrix-free sketch with gathered costs; "
+            "build it with build_batched_mf_sketch()"
+        )
+    return _batched_sketch_solve(bp, sketch, sketch.cost_e, tol, max_iter)

@@ -11,8 +11,10 @@ The public surface is organized around three types plus one front end
   Sec. 2.2);
 * **solve(problem, method=..., \\*\\*opts) -> Solution** — a string-keyed
   solver registry (``available_methods()`` lists it: ``dense``, ``log``,
-  ``spar_sink_coo``, ``spar_sink_block_ell``, ``spar_sink_dense``,
-  ``rand_sink``, ``greenkhorn``, ``nys_sink``, ``screenkhorn_lite``).
+  ``spar_sink_coo``, ``spar_sink_mf``, ``spar_sink_block_ell``,
+  ``spar_sink_dense``, ``rand_sink``, ``greenkhorn``, ``nys_sink``,
+  ``screenkhorn_lite``). The matrix-free ``spar_sink_mf`` runs on a
+  `PointCloudGeometry` and never materializes an (n, m) array.
   Every solver returns a `Solution` with ``.value``, ``.potentials``,
   ``.marginals()`` and a **lazy** ``.plan()`` that stays O(cap) for sparse
   sketches and only densifies on explicit request.
@@ -79,17 +81,20 @@ from repro.core.spar_sink import (
 )
 from repro.core.sparsify import (
     ot_sampling_probs,
+    uniform_prob_factors,
     uniform_probs,
     uot_sampling_probs,
 )
 from repro.core.api import (
     Geometry,
     OTProblem,
+    PointCloudGeometry,
     Solution,
     SparsePlan,
     UOTProblem,
     available_methods,
     build_coo_sketch,
+    build_mf_sketch,
     register_solver,
     solve,
 )
@@ -100,6 +105,7 @@ from repro.core.divergence import sinkhorn_divergence, spar_sink_divergence
 __all__ = [
     "Geometry",
     "OTProblem",
+    "PointCloudGeometry",
     "SinkhornResult",
     "Solution",
     "SparSinkSolution",
@@ -107,6 +113,7 @@ __all__ = [
     "UOTProblem",
     "available_methods",
     "build_coo_sketch",
+    "build_mf_sketch",
     "default_cap",
     "default_max_blocks",
     "entropy",
@@ -138,6 +145,7 @@ __all__ = [
     "spar_sink_ot",
     "spar_sink_uot",
     "squared_euclidean_cost",
+    "uniform_prob_factors",
     "uniform_probs",
     "uot_cost_from_plan",
     "uot_sampling_probs",

@@ -19,7 +19,7 @@ bitwise-reproducible against per-problem ``solve()`` for the same keys:
     sols = executor.solve_batch(problems, method="spar_sink_coo",
                                 keys=keys, s=8 * s0(n))
 """
-from repro.core.api.geometry import Geometry
+from repro.core.api.geometry import Geometry, PointCloudGeometry
 from repro.core.api.problems import OTProblem, UOTProblem
 from repro.core.api.registry import (
     available_methods,
@@ -28,16 +28,23 @@ from repro.core.api.registry import (
     solve,
 )
 from repro.core.api.solution import SparsePlan, Solution
-from repro.core.api.solvers import build_coo_sketch, mix_uniform, sampling_probs
+from repro.core.api.solvers import (
+    build_coo_sketch,
+    build_mf_sketch,
+    mix_uniform,
+    sampling_probs,
+)
 
 __all__ = [
     "Geometry",
     "OTProblem",
+    "PointCloudGeometry",
     "Solution",
     "SparsePlan",
     "UOTProblem",
     "available_methods",
     "build_coo_sketch",
+    "build_mf_sketch",
     "get_solver",
     "mix_uniform",
     "register_solver",

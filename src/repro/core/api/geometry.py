@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core.geometry import (
     euclidean_cost,
+    gathered_cost,
     gibbs_kernel,
     grid_support_2d,
     log_gibbs_kernel,
@@ -30,7 +31,7 @@ from repro.core.geometry import (
     wfr_cost,
 )
 
-__all__ = ["Geometry"]
+__all__ = ["Geometry", "PointCloudGeometry"]
 
 _COST_FNS: dict[str, Callable[..., jax.Array]] = {
     "sqeuclidean": squared_euclidean_cost,
@@ -164,3 +165,194 @@ class Geometry:
         n, m = self.shape
         cached = sorted(set(self._kernels) | set(self._log_kernels))
         return f"Geometry({n}x{m}, cached_eps={cached})"
+
+
+class PointCloudGeometry(Geometry):
+    """Matrix-free point-cloud geometry: support points + a static cost name.
+
+    Shares `Geometry`'s API surface (``shape``/``dtype``/``kernel()``/
+    ``log_kernel()``/per-eps LRU cache), but the (n, m) cost is **lazy and
+    guarded**: any dense materialization (``.cost``, ``kernel()``,
+    ``log_kernel()``) raises above ``dense_guard`` support points — the
+    whole point of the matrix-free Spar-Sink path is that nothing O(n m)
+    ever exists. Instead it exposes
+
+    * ``entries(rows, cols, eps)``  — gathered ``(K_e, C_e)`` at k index
+      pairs in O(k d) (jnp on CPU, the Pallas gathered kernel on TPU);
+    * ``cost_entries(rows, cols)``  — raw costs only;
+    * ``cost_block(i0, i1, j0, j1)`` — a dense sub-tile for streaming
+      consumers, still never the full matrix.
+
+    Costs: ``"sqeuclidean"`` (paper Sec. 5.1) and ``"wfr"`` (Sec. 2.2,
+    blocked beyond range ``pi * eta``). Below the guard, dense access is
+    allowed and **bitwise identical** to ``Geometry.from_points(x, y)`` /
+    ``Geometry.wfr(x, y, eta=...)`` — the shared-variate parity tests of
+    the matrix-free solver rely on this.
+    """
+
+    #: dense materialization allowed only up to this many support points
+    DEFAULT_DENSE_GUARD = 8192
+
+    def __init__(
+        self,
+        x: jax.Array,
+        y: jax.Array | None = None,
+        *,
+        cost: str = "sqeuclidean",
+        eta: float = 1.0,
+        dense_guard: int | None = None,
+        cache_size: int | None = None,
+    ):
+        if cost not in ("sqeuclidean", "wfr"):
+            raise KeyError(
+                f"unknown matrix-free cost {cost!r}; available: sqeuclidean, wfr"
+            )
+        self.x = jnp.asarray(x)
+        self.y = self.x if y is None else jnp.asarray(y)
+        self.cost_name = cost
+        self.eta = float(eta)
+        self.dense_guard = (
+            self.DEFAULT_DENSE_GUARD if dense_guard is None else int(dense_guard)
+        )
+        self.scale = 1.0
+        self.cache_size = (
+            self.DEFAULT_CACHE_SIZE if cache_size is None else cache_size
+        )
+        self._kernels = OrderedDict()
+        self._log_kernels = OrderedDict()
+        self._cost_cache: jax.Array | None = None
+
+    # ------------------------------------------------------------------ ctors
+    # Geometry's classmethods build a dense cost and would hand it to this
+    # __init__ as "support points" — override them all with point-cloud
+    # counterparts (or a loud error where no matrix-free form exists).
+
+    @classmethod
+    def from_cost(cls, cost: jax.Array) -> "Geometry":
+        raise TypeError(
+            "PointCloudGeometry is built from support points, not a cost "
+            "matrix; use PointCloudGeometry(x, y, cost=...) or Geometry(C)"
+        )
+
+    @classmethod
+    def from_points(
+        cls,
+        x: jax.Array,
+        y: jax.Array | None = None,
+        *,
+        cost: str = "sqeuclidean",
+        normalize: bool = False,
+    ) -> "Geometry":
+        geom = cls(x, y, cost=cost)
+        # normalization needs the dense max cost: guarded, returns a dense
+        # Geometry below the guard exactly like the base classmethod
+        return geom.normalized() if normalize else geom
+
+    @classmethod
+    def wfr(
+        cls,
+        x: jax.Array,
+        y: jax.Array | None = None,
+        *,
+        eta: float = 1.0,
+        d: jax.Array | None = None,
+    ) -> "Geometry":
+        if d is not None:
+            raise TypeError(
+                "precomputed pairwise distances are a dense (n, m) array; "
+                "use Geometry.wfr(..., d=d) for that"
+            )
+        return cls(x, y, cost="wfr", eta=eta)
+
+    @classmethod
+    def from_grid(
+        cls, h: int, w: int, *, eta: float | None = None, dtype=jnp.float64
+    ) -> "Geometry":
+        pts = grid_support_2d(h, w, dtype=dtype)
+        if eta is None:
+            return cls(pts)
+        return cls(pts, cost="wfr", eta=eta)
+
+    # ------------------------------------------------------------- guarded dense
+
+    def _check_guard(self, what: str) -> None:
+        n, m = self.shape
+        if max(n, m) > self.dense_guard:
+            raise ValueError(
+                f"PointCloudGeometry({n}x{m}) refuses dense {what} "
+                f"materialization (dense_guard={self.dense_guard}); use "
+                f"entries()/cost_block() or solve(..., method='spar_sink_mf')"
+            )
+
+    @property
+    def cost(self) -> jax.Array:
+        """Dense cost — guarded; bitwise the `Geometry.from_points` matrix."""
+        self._check_guard("cost")
+        if self._cost_cache is None:
+            if self.cost_name == "wfr":
+                self._cost_cache = wfr_cost(self.x, self.y, eta=self.eta)
+            else:
+                self._cost_cache = squared_euclidean_cost(self.x, self.y)
+        return self._cost_cache
+
+    # `kernel()`/`log_kernel()` inherit Geometry's LRU-cached builders; they
+    # read `self.cost`, so the guard applies to them automatically.
+
+    # ------------------------------------------------------------------ views
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.x.shape[0], self.y.shape[0])
+
+    @property
+    def dtype(self):
+        return self.x.dtype
+
+    def normalized(self) -> "Geometry":
+        """Dense-path escape hatch (guarded): normalizing needs the max cost."""
+        self._check_guard("normalized cost")
+        return super().normalized()
+
+    # ------------------------------------------------- matrix-free evaluation
+
+    def cost_entries(self, rows: jax.Array, cols: jax.Array) -> jax.Array:
+        """``C[rows, cols]`` in O(k d) — never materializes the matrix."""
+        return gathered_cost(
+            self.x, self.y, rows, cols, cost=self.cost_name, eta=self.eta
+        )
+
+    def entries(
+        self, rows: jax.Array, cols: jax.Array, eps: float, *, impl: str = "auto"
+    ) -> tuple[jax.Array, jax.Array]:
+        """Gathered ``(K_e, C_e) = (exp(-C/eps), C)`` at k index pairs.
+
+        ``impl``: ``"jnp"`` (dtype-preserving XLA gather+elementwise),
+        ``"pallas"`` (the fused `repro.kernels.gather_kernel`, f32), or
+        ``"auto"`` — Pallas on TPU, jnp elsewhere.
+        """
+        if impl == "auto":
+            impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        if impl == "pallas":
+            from repro.kernels.ops import gathered_kernel
+
+            return gathered_kernel(
+                self.x, self.y, rows, cols,
+                eps=float(eps), cost=self.cost_name, eta=self.eta,
+            )
+        if impl != "jnp":
+            raise ValueError(f"unknown impl {impl!r}; available: auto, jnp, pallas")
+        c_e = self.cost_entries(rows, cols)
+        return gibbs_kernel(c_e, float(eps)), c_e
+
+    def cost_block(self, i0: int, i1: int, j0: int, j1: int) -> jax.Array:
+        """Dense cost sub-tile ``C[i0:i1, j0:j1]`` (streaming consumers)."""
+        if self.cost_name == "wfr":
+            return wfr_cost(self.x[i0:i1], self.y[j0:j1], eta=self.eta)
+        return squared_euclidean_cost(self.x[i0:i1], self.y[j0:j1])
+
+    def __repr__(self) -> str:
+        n, m = self.shape
+        return (
+            f"PointCloudGeometry({n}x{m}, cost={self.cost_name!r}, "
+            f"dense_guard={self.dense_guard})"
+        )

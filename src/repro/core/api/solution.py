@@ -38,11 +38,12 @@ __all__ = ["SparsePlan", "Solution"]
 class SparsePlan(NamedTuple):
     """Transport plan restricted to the sampled sketch entries (padded COO).
 
-    Entries beyond ``nnz`` are zero-valued padding at ``(0, 0)``; all
-    reductions below remain exact because padded ``vals`` are 0.
+    Entries beyond ``nnz`` are zero-valued padding (parked at the last row
+    so the row ids stay sorted); all reductions below remain exact because
+    padded ``vals`` are 0.
     """
 
-    rows: jax.Array  # (cap,) int32
+    rows: jax.Array  # (cap,) int32 (ascending; padding parks at n-1)
     cols: jax.Array  # (cap,) int32
     vals: jax.Array  # (cap,) plan mass per kept entry
     nnz: jax.Array  # () int32
@@ -80,6 +81,10 @@ class Solution:
     result: SinkhornResult  # raw u/v scalings, or f/g potentials in log domain
     domain: str = "scaling"  # "scaling" | "log"
     nnz: jax.Array | None = None  # realized sketch size (sparse solvers)
+    #: True when the sketch draw exceeded the static COO capacity and the
+    #: trailing entries were dropped — the estimate is then biased low and
+    #: the caller should re-solve with a larger ``cap`` (sparse solvers only)
+    overflowed: jax.Array | None = None
     _plan_thunk: Callable[[], "SparsePlan | jax.Array"] | None = field(
         default=None, repr=False
     )

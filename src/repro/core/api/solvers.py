@@ -1,12 +1,15 @@
 """The built-in solver registry entries behind ``solve(problem, method=...)``.
 
-Nine methods, one `Solution` contract:
+Ten methods, one `Solution` contract:
 
 ===================== ========================================================
 ``dense``             Algorithm 1/2 on the dense Gibbs kernel (scaling domain)
 ``log``               log-domain Algorithm 1/2 (small-``eps`` safe)
 ``spar_sink_coo``     paper Algorithms 3/4 — importance sketch, padded COO,
                       O(s) per iteration and O(cap) plan
+``spar_sink_mf``      **matrix-free** Algorithms 3/4 on a `PointCloudGeometry`
+                      — factorized O(s log n) sampler + gathered-kernel
+                      evaluation, no (n, m) array anywhere (Õ(n) end to end)
 ``spar_sink_block_ell`` tile-granular TPU sketch (DESIGN §3)
 ``spar_sink_dense``   exact eq.(7) sketch as a dense masked array (reference)
 ``rand_sink``         Spar-Sink with uniform probabilities (baseline)
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparsify
+from repro.core.api.geometry import PointCloudGeometry
 from repro.core.api.problems import OTProblem, UOTProblem
 from repro.core.api.registry import register_solver
 from repro.core.api.solution import SparsePlan, Solution
@@ -44,12 +48,14 @@ from repro.core.sinkhorn import (
 )
 from repro.core.spar_sink import (
     coo_objective_ot,
+    coo_objective_ot_entries,
     coo_objective_uot,
+    coo_objective_uot_entries,
     default_cap,
     default_max_blocks,
 )
 
-__all__ = ["build_coo_sketch", "mix_uniform", "sampling_probs"]
+__all__ = ["build_coo_sketch", "build_mf_sketch", "mix_uniform", "sampling_probs"]
 
 
 # --------------------------------------------------------------------------
@@ -57,10 +63,19 @@ __all__ = ["build_coo_sketch", "mix_uniform", "sampling_probs"]
 # --------------------------------------------------------------------------
 
 
-def mix_uniform(probs: jax.Array, shrinkage: float) -> jax.Array:
-    """Thm 1 condition (ii): keep ``p*_ij >= c3 s / n^2`` by uniform mixing."""
+def mix_uniform(probs, shrinkage: float):
+    """Thm 1 condition (ii): keep ``p*_ij >= c3 s / n^2`` by uniform mixing.
+
+    ``probs`` may be an ``(fr, fc)`` factor pair (rank-1 probabilities);
+    mixing breaks the rank-1 structure, so factored probs only pass through
+    unmixed."""
     if shrinkage <= 0.0:
         return probs
+    if isinstance(probs, tuple):
+        raise ValueError(
+            "uniform mixing (shrinkage > 0) is rank-2 and cannot be applied "
+            "to factored probabilities; pass a dense probs array instead"
+        )
     n, m = probs.shape
     return (1.0 - shrinkage) * probs + shrinkage / (n * m)
 
@@ -95,6 +110,54 @@ def build_coo_sketch(
     probs = _resolve_probs(problem, probs, shrinkage)
     cap = default_cap(s) if cap is None else cap
     return sparsify.sparsify_coo(key, problem.kernel(), probs, s, cap)
+
+
+def _mf_geometry(problem: OTProblem) -> PointCloudGeometry:
+    geom = problem.geom
+    if not isinstance(geom, PointCloudGeometry):
+        raise TypeError(
+            "the matrix-free path needs support points: build the problem on "
+            "a PointCloudGeometry(x, y, cost=...) instead of a dense-cost "
+            f"Geometry (got {type(geom).__name__})"
+        )
+    return geom
+
+
+def build_mf_sketch(
+    problem: OTProblem,
+    key: jax.Array,
+    s: float,
+    *,
+    cap: int | None = None,
+    impl: str = "auto",
+) -> tuple[sparsify.SparseKernelCOO, jax.Array]:
+    """Matrix-free importance sketch in O(n + s log n) — no (n, m) array.
+
+    OT: the eq. (9) probabilities are rank-1, so the factorized sampler
+    draws them exactly (`sparsify.sparsify_coo_mf`). UOT: proposes from the
+    rank-1 ``(a_i b_j)^{lam/(2lam+eps)}`` part of eq. (11) and thins with
+    the on-the-fly ``K^{eps/(2lam+eps)}`` acceptance; ``s`` is then the
+    proposal budget. Returns ``(sketch, C_e)`` with the gathered raw costs.
+    """
+    geom = _mf_geometry(problem)
+    eps = float(problem.eps)
+    cap = default_cap(s) if cap is None else cap
+    entries = lambda r, c: geom.entries(r, c, eps, impl=impl)
+    if isinstance(problem, UOTProblem) and not problem.is_balanced:
+        lam = float(problem.lam)
+        c_ab = lam / (2.0 * lam + eps)
+        qa, qb = problem.a ** c_ab, problem.b ** c_ab
+        return sparsify.sparsify_coo_mf(
+            key,
+            qa / jnp.sum(qa),
+            qb / jnp.sum(qb),
+            s,
+            cap,
+            entries,
+            thin_scale=1.0 / (2.0 * lam + eps),
+        )
+    ra, rb = sparsify.ot_sampling_prob_factors(problem.a, problem.b)
+    return sparsify.sparsify_coo_mf(key, ra, rb, s, cap, entries)
 
 
 def _coo_value(problem: OTProblem, sk, res) -> jax.Array:
@@ -188,7 +251,14 @@ def _solve_spar_sink_coo(
 ) -> Solution:
     """Spar-Sink on the padded-COO sketch: O(s) iterations, O(cap) plan."""
     sk = build_coo_sketch(problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage)
-    res = generic_scaling_loop(
+    res = _coo_scaling_loop(problem, sk, tol, max_iter)
+    return _coo_solution(
+        "spar_sink_coo", problem, sk, res, _coo_value(problem, sk, res)
+    )
+
+
+def _coo_scaling_loop(problem: OTProblem, sk, tol: float, max_iter: int):
+    return generic_scaling_loop(
         lambda v: sparsify.coo_matvec(sk, v),
         lambda u: sparsify.coo_rmatvec(sk, u),
         problem.a,
@@ -198,6 +268,8 @@ def _solve_spar_sink_coo(
         max_iter=max_iter,
     )
 
+
+def _coo_solution(method: str, problem: OTProblem, sk, res, value) -> Solution:
     def sparse_plan() -> SparsePlan:
         # T~ restricted to kept entries; padded slots carry vals == 0.
         return SparsePlan(
@@ -205,14 +277,57 @@ def _solve_spar_sink_coo(
         )
 
     return Solution(
-        method="spar_sink_coo",
+        method=method,
         problem=problem,
-        value=_coo_value(problem, sk, res),
+        value=value,
         result=res,
         domain="scaling",
         nnz=sk.nnz,
+        overflowed=sk.overflowed,
         _plan_thunk=sparse_plan,
     )
+
+
+@register_solver("spar_sink_mf")
+def _solve_spar_sink_mf(
+    problem: OTProblem,
+    *,
+    key: jax.Array,
+    s: float,
+    cap: int | None = None,
+    impl: str = "auto",
+    shared_variates: bool = False,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> Solution:
+    """Matrix-free Spar-Sink: Õ(n) end to end, no (n, m) array anywhere.
+
+    Requires a `PointCloudGeometry` problem. Sketch construction is the
+    factorized O(s log n) sampler (`build_mf_sketch`), the iteration runs
+    sorted-COO segment-sums, and the objective uses gathered costs — so
+    memory stays O(n + s) and n >= 2^17 fits on a laptop.
+
+    ``shared_variates=True`` is the small-n **test mode**: it draws the
+    exact Bernoulli bits of the dense-sketch ``spar_sink_coo`` path (which
+    materializes O(n m), hence only below the geometry's ``dense_guard``),
+    making scalings bitwise-identical to ``spar_sink_coo`` for the same
+    PRNG key; only the objective differs (gathered vs dense-indexed costs,
+    equal up to rounding).
+    """
+    geom = _mf_geometry(problem)
+    if shared_variates:
+        sk = build_coo_sketch(problem, key, s, cap=cap)  # guarded dense draw
+        c_e = geom.cost_entries(sk.rows, sk.cols)
+    else:
+        sk, c_e = build_mf_sketch(problem, key, s, cap=cap, impl=impl)
+    res = _coo_scaling_loop(problem, sk, tol, max_iter)
+    if isinstance(problem, UOTProblem) and not problem.is_balanced:
+        value = coo_objective_uot_entries(
+            sk, c_e, res, problem.a, problem.b, float(problem.lam), problem.eps
+        )
+    else:
+        value = coo_objective_ot_entries(sk, c_e, res, problem.eps)
+    return _coo_solution("spar_sink_mf", problem, sk, res, value)
 
 
 @register_solver("rand_sink")
@@ -225,14 +340,18 @@ def _solve_rand_sink(
     tol: float = 1e-6,
     max_iter: int = 1000,
 ) -> Solution:
-    """Spar-Sink with uniform probabilities (the paper's Rand-Sink baseline)."""
+    """Spar-Sink with uniform probabilities (the paper's Rand-Sink baseline).
+
+    The uniform probabilities are passed as O(n)+O(m) row/col factors
+    (`sparsify.uniform_prob_factors`) — the baseline no longer materializes
+    an (n, m) probability array (same keep-probabilities, same draws)."""
     n, m = problem.shape
     sol = _solve_spar_sink_coo(
         problem,
         key=key,
         s=s,
         cap=cap,
-        probs=sparsify.uniform_probs(n, m, problem.geom.dtype),
+        probs=sparsify.uniform_prob_factors(n, m, problem.geom.dtype),
         tol=tol,
         max_iter=max_iter,
     )

@@ -25,7 +25,9 @@ __all__ = [
     "euclidean_cost",
     "wfr_cost",
     "wfr_log_kernel",
+    "gathered_cost",
     "gibbs_kernel",
+    "wfr_from_dist",
     "log_gibbs_kernel",
     "grid_support_2d",
     "normalize_cost",
@@ -51,6 +53,21 @@ def euclidean_cost(x: jax.Array, y: jax.Array | None = None) -> jax.Array:
     return jnp.sqrt(_pairwise_sqdist(x, y) + 1e-30)
 
 
+def wfr_from_dist(
+    d: jax.Array, eta: float, cos_floor: float = 1e-300
+) -> tuple[jax.Array, jax.Array]:
+    """Distances -> (WFR cost ``-2 log cos_+(d/2eta)``, blocked mask).
+
+    The single implementation of the paper's Sec. 2.2 formula, shared by
+    `wfr_cost`, `gathered_cost`, and the Pallas kernels' cost switch
+    (which pass ``cos_floor=1e-30``, the f32-safe clamp)."""
+    z = d / (2.0 * eta)
+    blocked = z >= (math.pi / 2.0)
+    cosz = jnp.cos(jnp.minimum(z, math.pi / 2.0))
+    # -log(cos^2) = -2 log cos ; callers put +inf on the blocked set.
+    return -2.0 * jnp.log(jnp.maximum(cosz, cos_floor)), blocked
+
+
 def wfr_cost(
     x: jax.Array,
     y: jax.Array | None = None,
@@ -65,11 +82,7 @@ def wfr_cost(
     """
     if d is None:
         d = euclidean_cost(x, y)
-    z = d / (2.0 * eta)
-    blocked = z >= (math.pi / 2.0)
-    cosz = jnp.cos(jnp.minimum(z, math.pi / 2.0))
-    # -log(cos^2) = -2 log cos ; keep +inf on the blocked set.
-    c = -2.0 * jnp.log(jnp.maximum(cosz, 1e-300))
+    c, blocked = wfr_from_dist(d, eta)
     return jnp.where(blocked, jnp.inf, c)
 
 
@@ -89,6 +102,38 @@ def wfr_log_kernel(
     cosz = jnp.cos(jnp.minimum(z, math.pi / 2.0))
     logk = (2.0 / eps) * jnp.log(jnp.maximum(cosz, 1e-300))
     return jnp.where(blocked, -jnp.inf, logk)
+
+
+def gathered_cost(
+    x: jax.Array,
+    y: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    cost: str = "sqeuclidean",
+    eta: float = 1.0,
+) -> jax.Array:
+    """Entry-wise ground cost ``C[rows, cols]`` straight from support points.
+
+    The matrix-free evaluation of the paper's costs: O(k d) compute and
+    memory for k index pairs, never touching an (n, m) array. Blocked WFR
+    entries (``d >= pi * eta``) come out ``+inf``, exactly as `wfr_cost`.
+    """
+    xg, yg = x[rows], y[cols]
+    sq = jnp.maximum(
+        jnp.sum(xg * xg, axis=-1)
+        + jnp.sum(yg * yg, axis=-1)
+        - 2.0 * jnp.sum(xg * yg, axis=-1),
+        0.0,
+    )
+    if cost == "sqeuclidean":
+        return sq
+    if cost == "euclidean":
+        return jnp.sqrt(sq + 1e-30)
+    if cost == "wfr":
+        c, blocked = wfr_from_dist(jnp.sqrt(sq + 1e-30), eta)
+        return jnp.where(blocked, jnp.inf, c)
+    raise ValueError(f"unknown cost {cost!r}")
 
 
 def gibbs_kernel(cost: jax.Array, eps: float) -> jax.Array:

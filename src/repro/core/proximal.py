@@ -113,7 +113,8 @@ def prox_spar_sink(
     t0 = a[sk.rows] * b[sk.cols]
 
     def outer(t_e, _):
-        g = SparseKernelCOO(sk.rows, sk.cols, sk.vals * t_e, sk.nnz, sk.n, sk.m)
+        g = SparseKernelCOO(sk.rows, sk.cols, sk.vals * t_e, sk.nnz, sk.n, sk.m,
+                            csort=sk.csort, overflowed=sk.overflowed)
         res = generic_scaling_loop(
             lambda v: coo_matvec(g, v), lambda u: coo_rmatvec(g, u), a, b,
             tol=inner_tol, max_iter=inner_iters,

@@ -33,7 +33,9 @@ __all__ = [
     "spar_sink_ot",
     "spar_sink_uot",
     "coo_objective_ot",
+    "coo_objective_ot_entries",
     "coo_objective_uot",
+    "coo_objective_uot_entries",
 ]
 
 Method = Literal["dense", "coo", "block_ell"]
@@ -85,15 +87,42 @@ def _elem_entropy(t: jax.Array) -> jax.Array:
     return -jnp.where(t > 0, t * (logt - 1.0), 0.0)
 
 
-def coo_objective_ot(
-    sk: sparsify.SparseKernelCOO, C: jax.Array, res: SinkhornResult, eps: float
+def coo_objective_ot_entries(
+    sk: sparsify.SparseKernelCOO, c_e: jax.Array, res: SinkhornResult, eps: float
 ) -> jax.Array:
-    """``<T~,C> - eps H(T~)`` touching only the s kept entries."""
-    c_e = C[sk.rows, sk.cols]
+    """``<T~,C> - eps H(T~)`` from *gathered* costs ``c_e = C[rows, cols]``
+    — the matrix-free path hands in costs evaluated entry-wise from support
+    points, so no dense C is ever indexed."""
     t_e = res.u[sk.rows] * sk.vals * res.v[sk.cols]
     tc = jnp.sum(jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0))
     ent = jnp.sum(_elem_entropy(t_e))
     return tc - eps * ent
+
+
+def coo_objective_ot(
+    sk: sparsify.SparseKernelCOO, C: jax.Array, res: SinkhornResult, eps: float
+) -> jax.Array:
+    """``<T~,C> - eps H(T~)`` touching only the s kept entries."""
+    return coo_objective_ot_entries(sk, C[sk.rows, sk.cols], res, eps)
+
+
+def coo_objective_uot_entries(
+    sk: sparsify.SparseKernelCOO,
+    c_e: jax.Array,
+    res: SinkhornResult,
+    a: jax.Array,
+    b: jax.Array,
+    lam: float,
+    eps: float,
+) -> jax.Array:
+    """Eq. (10) objective on the sparse plan from gathered costs (see
+    `coo_objective_ot_entries`)."""
+    t_e = res.u[sk.rows] * sk.vals * res.v[sk.cols]
+    tc = jnp.sum(jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0))
+    ent = jnp.sum(_elem_entropy(t_e))
+    row = jax.ops.segment_sum(t_e, sk.rows, num_segments=sk.n)
+    col = jax.ops.segment_sum(t_e, sk.cols, num_segments=sk.m)
+    return tc + lam * kl_divergence(row, a) + lam * kl_divergence(col, b) - eps * ent
 
 
 def coo_objective_uot(
@@ -105,13 +134,7 @@ def coo_objective_uot(
     lam: float,
     eps: float,
 ) -> jax.Array:
-    c_e = C[sk.rows, sk.cols]
-    t_e = res.u[sk.rows] * sk.vals * res.v[sk.cols]
-    tc = jnp.sum(jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0))
-    ent = jnp.sum(_elem_entropy(t_e))
-    row = jax.ops.segment_sum(t_e, sk.rows, num_segments=sk.n)
-    col = jax.ops.segment_sum(t_e, sk.cols, num_segments=sk.m)
-    return tc + lam * kl_divergence(row, a) + lam * kl_divergence(col, b) - eps * ent
+    return coo_objective_uot_entries(sk, C[sk.rows, sk.cols], res, a, b, lam, eps)
 
 
 # --------------------------------------------------------------------------

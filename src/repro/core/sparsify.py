@@ -1,16 +1,24 @@
 """Importance sparsification of the Gibbs kernel (paper Section 3).
 
-Three faithful-to-eq.(7) representations of the sketch ``K~``:
+Four faithful-to-eq.(7) representations of the sketch ``K~``:
 
 * ``sparsify_dense``      — dense array with zeros (exact reference; O(n^2) compute)
 * ``sparsify_coo``        — padded COO + segment-sum mat-vecs (O(s) compute; the
                             paper's algorithm verbatim, with static shapes for jit)
+* ``sparsify_coo_mf``     — **matrix-free** COO: the Poissonized draw of eq. (7)
+                            for rank-1 probabilities, O(n + s log n) with entry
+                            values gathered from support points — no (n, m)
+                            array anywhere
 * ``sparsify_block_ell``  — **TPU adaptation**: Poisson sampling at 128x128 *tile*
                             granularity, stored in block-ELL layout so the
                             Spar-Sink iteration is dense MXU work (see DESIGN §3)
 
-All three draw inclusion decisions from the same uniform variates, so given the
-same PRNG key the COO sketch equals the dense sketch exactly (tested).
+The first three Bernoulli paths draw inclusion decisions from the same uniform
+variates, so given the same PRNG key the COO sketch equals the dense sketch
+exactly (tested). COO sketches come out sorted by row (with a col-sorted
+permutation ``csort``), so both segment-sum mat-vecs run with
+``indices_are_sorted=True``, and they flag capacity ``overflowed`` instead of
+truncating silently.
 
 Sampling probabilities:
 
@@ -31,10 +39,12 @@ __all__ = [
     "ot_sampling_prob_factors",
     "uot_sampling_probs",
     "uniform_probs",
+    "uniform_prob_factors",
     "poisson_keep_probs",
     "sparsify_dense",
     "SparseKernelCOO",
     "sparsify_coo",
+    "sparsify_coo_mf",
     "coo_matvec",
     "coo_rmatvec",
     "BlockEllKernel",
@@ -86,8 +96,25 @@ def uniform_probs(n: int, m: int, dtype=jnp.float32) -> jax.Array:
     return jnp.full((n, m), 1.0 / (n * m), dtype=dtype)
 
 
-def poisson_keep_probs(probs: jax.Array, s: float) -> jax.Array:
-    """``p*_ij = min(1, s p_ij)`` — inclusion probabilities of eq. (7)."""
+def uniform_prob_factors(n: int, m: int, dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    """Rand-Sink probabilities as O(n)+O(m) row/col factors: every
+    probability-consuming path broadcasts ``fr_i * fc_j`` on the fly, so
+    the uniform baseline never materializes an (n, m) probability array."""
+    return (
+        jnp.full((n,), 1.0 / n, dtype=dtype),
+        jnp.full((m,), 1.0 / m, dtype=dtype),
+    )
+
+
+def poisson_keep_probs(probs, s: float) -> jax.Array:
+    """``p*_ij = min(1, s p_ij)`` — inclusion probabilities of eq. (7).
+
+    ``probs`` is either an (n, m) array or an ``(fr, fc)`` factor pair
+    (``p_ij = fr_i * fc_j``, e.g. `uniform_prob_factors`), broadcast here
+    instead of being materialized by the caller."""
+    if isinstance(probs, tuple):
+        fr, fc = probs
+        return jnp.minimum(1.0, s * (fr[:, None] * fc[None, :]))
     return jnp.minimum(1.0, s * probs)
 
 
@@ -113,12 +140,20 @@ def sparsify_dense(key: jax.Array, K: jax.Array, probs: jax.Array, s: float) -> 
 
 
 class SparseKernelCOO(NamedTuple):
-    rows: jax.Array  # (cap,) int32, padded with 0
-    cols: jax.Array  # (cap,) int32, padded with 0
+    """Padded COO sketch, **sorted by row** at construction; padded slots
+    carry ``vals == 0`` and sort to the end (row ``n-1``)."""
+
+    rows: jax.Array  # (cap,) int32, ascending; padding parks at n-1
+    cols: jax.Array  # (cap,) int32
     vals: jax.Array  # (cap,)       padded with 0.0
-    nnz: jax.Array  # () int32 true count (may exceed cap -> overflow truncation)
+    nnz: jax.Array  # () int32 realized count (truncated to cap on overflow)
     n: int
     m: int
+    # col-sorted permutation: cols[csort] is ascending, so K~^T u runs a
+    # sorted segment-sum too. None only on hand-built sketches (then the
+    # mat-vecs fall back to the unsorted scatter).
+    csort: jax.Array | None = None  # (cap,) int32
+    overflowed: jax.Array | None = None  # () bool — realized nnz exceeded cap
 
     @property
     def cap(self) -> int:
@@ -126,31 +161,143 @@ class SparseKernelCOO(NamedTuple):
 
 
 def sparsify_coo(
-    key: jax.Array, K: jax.Array, probs: jax.Array, s: float, cap: int
+    key: jax.Array, K: jax.Array, probs, s: float, cap: int
 ) -> SparseKernelCOO:
     """Padded COO sketch. ``cap`` is a static capacity (>= realized nnz w.h.p.;
-    E[nnz] <= s, so ``cap ~ s + 5 sqrt(s)`` is comfortable)."""
+    E[nnz] <= s, so ``cap ~ s + 5 sqrt(s)`` is comfortable). If the draw
+    exceeds ``cap`` anyway, the trailing entries (row-major order) are
+    dropped and ``overflowed`` is set. ``probs`` may be an (n, m) array or
+    an ``(fr, fc)`` factor pair (see `poisson_keep_probs`)."""
     n, m = K.shape
     p_star = poisson_keep_probs(probs, s)
     keep = _keep_mask(key, p_star)
-    nnz = jnp.sum(keep).astype(jnp.int32)
-    flat_idx = jnp.nonzero(keep.ravel(), size=cap, fill_value=0)[0]
-    valid = jnp.arange(cap) < nnz
+    true_nnz = jnp.sum(keep).astype(jnp.int32)
+    # fill with the last flat index: padding parks at (n-1, m-1), keeping
+    # the row ids ascending for the sorted segment-sum in coo_matvec
+    flat_idx = jnp.nonzero(keep.ravel(), size=cap, fill_value=n * m - 1)[0]
+    valid = jnp.arange(cap) < true_nnz
     vals_dense = jnp.where(keep, K / jnp.maximum(p_star, 1e-300), 0.0).ravel()
     vals = jnp.where(valid, vals_dense[flat_idx], 0.0)
-    rows = jnp.where(valid, flat_idx // m, 0).astype(jnp.int32)
-    cols = jnp.where(valid, flat_idx % m, 0).astype(jnp.int32)
-    return SparseKernelCOO(rows, cols, vals, nnz, n, m)
+    rows = (flat_idx // m).astype(jnp.int32)
+    cols = (flat_idx % m).astype(jnp.int32)
+    return SparseKernelCOO(
+        rows,
+        cols,
+        vals,
+        jnp.minimum(true_nnz, cap),
+        n,
+        m,
+        csort=jnp.argsort(cols).astype(jnp.int32),
+        overflowed=true_nnz > cap,
+    )
+
+
+def sparsify_coo_mf(
+    key: jax.Array,
+    ra: jax.Array,
+    rb: jax.Array,
+    s: float,
+    cap: int,
+    entries_fn,
+    *,
+    thin_scale: float | None = None,
+) -> tuple[SparseKernelCOO, jax.Array]:
+    """Matrix-free COO sketch from rank-1 probabilities in O(n + cap log n).
+
+    The Poissonized form of eq. (7) for factorized ``p_ij = ra_i rb_j``
+    (eq. 9): entry multiplicities ``N_ij ~ Poisson(s ra_i rb_j)`` are drawn
+    by splitting — per-row totals ``N_i ~ Poisson(s ra_i)`` (the factorized
+    row marginals), then each draw's column by inverse-CDF on ``rb`` — and
+    every drawn copy contributes ``K_ij / (s ra_i rb_j)``, so
+    ``E[K~_ij] = K_ij`` exactly, entry-wise, like the Bernoulli sketch.
+    No (n, m) array is ever touched: kernel/cost values come from
+    ``entries_fn(rows, cols) -> (K_e, C_e)`` (gathered evaluation).
+
+    With ``thin_scale = 1/(2 lam + eps)`` the draw covers eq. (11): the
+    rank-1 ``(a_i b_j)^{lam/(2lam+eps)}`` part is the proposal (pass its
+    normalized factors as ``ra``/``rb``) and each proposal is thinned by
+    the on-the-fly acceptance ``K_ij^{eps/(2lam+eps)} = exp(-C_ij *
+    thin_scale)``; accepted copies are reweighted by the *known* rate
+    ``s ra_i rb_j acc_ij``, so the sketch stays exactly unbiased without
+    ever computing eq. (11)'s O(n^2) normalizer. ``s`` is then the
+    proposal budget (expected kept count is ``s * E_q[acc] <= s``).
+
+    Returns ``(sketch, C_e)`` — the gathered raw costs ride along so the
+    sparse objective never re-gathers (``C_e`` stays index-aligned with the
+    sketch arrays). Rows come out sorted; duplicate draws (multiplicity
+    >= 2) are merged into one entry carrying the summed weight, and all
+    zero slots are compacted to the tail so the first ``nnz`` entries are
+    exactly the realized sketch.
+    """
+    n, m = ra.shape[0], rb.shape[0]
+    k_counts, k_cols, k_acc = jax.random.split(key, 3)
+    counts = jax.random.poisson(k_counts, s * ra)  # (n,) per-row totals
+    total = jnp.sum(counts).astype(jnp.int32)
+    slot = jnp.arange(cap)
+    rows = jnp.searchsorted(jnp.cumsum(counts), slot, side="right")
+    rows = jnp.minimum(rows, n - 1).astype(jnp.int32)  # overflow slots park at n-1
+    u = jax.random.uniform(k_cols, (cap,), dtype=rb.dtype)
+    cols = jnp.searchsorted(jnp.cumsum(rb), u, side="right")
+    cols = jnp.minimum(cols, m - 1).astype(jnp.int32)
+    valid = slot < jnp.minimum(total, cap)
+    k_e, c_e = entries_fn(rows, cols)
+    rate = s * ra[rows] * rb[cols]  # E[multiplicity] per drawn entry
+    if thin_scale is not None:
+        acc = jnp.exp(-c_e * thin_scale)  # K^{eps/(2lam+eps)}; blocked -> 0
+        valid = valid & (jax.random.uniform(k_acc, (cap,), dtype=rb.dtype) < acc)
+        rate = rate * acc
+    vals = jnp.where(valid, k_e / jnp.maximum(rate, 1e-300), 0.0)
+    # Merge duplicate draws (multiplicity >= 2 of one pair) so the sparse
+    # objective's entry-wise entropy sees the summed plan mass, then compact
+    # every zero slot (rejected proposals, blocked pairs, overflow, merged
+    # copies) to the tail: "entries beyond nnz are padding" stays true.
+    order = jnp.lexsort((cols, rows))  # rows primary: stays row-sorted
+    rows, cols, vals, c_e = rows[order], cols[order], vals[order], c_e[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (rows[1:] != rows[:-1]) | (cols[1:] != cols[:-1])]
+    )
+    grp = jnp.cumsum(first) - 1
+    merged = jax.ops.segment_sum(vals, grp, num_segments=cap, indices_are_sorted=True)
+    vals = jnp.where(first, merged[grp], 0.0)
+    compact = jnp.argsort(vals == 0)  # stable: nonzero first, row order kept
+    rows, cols, vals, c_e = (
+        rows[compact], cols[compact], vals[compact], c_e[compact]
+    )
+    nz = vals != 0
+    sk = SparseKernelCOO(
+        jnp.where(nz, rows, n - 1).astype(jnp.int32),
+        jnp.where(nz, cols, m - 1).astype(jnp.int32),
+        vals,
+        jnp.sum(nz).astype(jnp.int32),
+        n,
+        m,
+        csort=jnp.argsort(jnp.where(nz, cols, m - 1)).astype(jnp.int32),
+        overflowed=total > cap,
+    )
+    return sk, c_e
 
 
 def coo_matvec(sk: SparseKernelCOO, v: jax.Array) -> jax.Array:
-    """``K~ v`` in O(cap)."""
-    return jax.ops.segment_sum(sk.vals * v[sk.cols], sk.rows, num_segments=sk.n)
+    """``K~ v`` in O(cap); sorted scatter on construction-sorted sketches."""
+    return jax.ops.segment_sum(
+        sk.vals * v[sk.cols],
+        sk.rows,
+        num_segments=sk.n,
+        indices_are_sorted=sk.csort is not None,
+    )
 
 
 def coo_rmatvec(sk: SparseKernelCOO, u: jax.Array) -> jax.Array:
-    """``K~^T u`` in O(cap)."""
-    return jax.ops.segment_sum(sk.vals * u[sk.rows], sk.cols, num_segments=sk.m)
+    """``K~^T u`` in O(cap); runs the col-sorted permutation when available."""
+    data = sk.vals * u[sk.rows]
+    if sk.csort is None:
+        return jax.ops.segment_sum(data, sk.cols, num_segments=sk.m)
+    return jax.ops.segment_sum(
+        data[sk.csort],
+        sk.cols[sk.csort],
+        num_segments=sk.m,
+        indices_are_sorted=True,
+    )
 
 
 # --------------------------------------------------------------------------

@@ -2,6 +2,7 @@
 
 * ``fused_sinkhorn`` — online Gibbs-kernel mat-vec / LSE (never materialize K)
 * ``block_ell``      — block-sparse sketch mat-vec (scalar-prefetch gather)
+* ``gather_kernel``  — gathered (K_e, C_e) evaluation at sampled index pairs
 * ``ops``            — jit'd public wrappers with padding & CPU interpret mode
 * ``ref``            — oracles used by the kernel test sweeps
 """
@@ -11,6 +12,7 @@ from repro.kernels.ops import (
     batched_coo_rmatvec,
     block_ell_matvec,
     fused_sinkhorn_solve,
+    gathered_kernel,
     online_lse,
     online_matvec,
 )
@@ -21,6 +23,7 @@ __all__ = [
     "batched_coo_rmatvec",
     "block_ell_matvec",
     "fused_sinkhorn_solve",
+    "gathered_kernel",
     "online_lse",
     "online_matvec",
 ]

@@ -21,7 +21,6 @@ VMEM footprint per step ~= (Bn + Bm) * d_pad * 4 + Bn*Bm*4 bytes; defaults
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -32,20 +31,26 @@ __all__ = ["online_matvec_call", "online_lse_call"]
 _NEG_INF = -1e30
 
 
+def _cost_from_sq(sq, cost: str, eta: float):
+    """Squared distances -> (ground cost, blocked mask | None). Shared by the
+    tile kernels here and the gathered-entry kernel (gather_kernel.py); the
+    WFR formula itself lives in `repro.core.geometry.wfr_from_dist` (passed
+    the f32-safe cos clamp here)."""
+    if cost == "sqeuclidean":
+        return sq, None
+    if cost == "wfr":
+        from repro.core.geometry import wfr_from_dist
+
+        return wfr_from_dist(jnp.sqrt(sq + 1e-30), eta, cos_floor=1e-30)
+    raise ValueError(f"unknown cost {cost!r}")
+
+
 def _cost_tile(x, y, cost: str, eta: float):
     """(Bn, d), (Bm, d) -> (Bn, Bm) ground-cost tile, computed in VMEM."""
     x2 = jnp.sum(x * x, axis=-1, keepdims=True)  # (Bn, 1)
     y2 = jnp.sum(y * y, axis=-1, keepdims=True).T  # (1, Bm)
     sq = jnp.maximum(x2 + y2 - 2.0 * jnp.dot(x, y.T, preferred_element_type=jnp.float32), 0.0)
-    if cost == "sqeuclidean":
-        return sq, None
-    if cost == "wfr":
-        d = jnp.sqrt(sq + 1e-30)
-        z = d / (2.0 * eta)
-        blocked = z >= (math.pi / 2.0)
-        c = -2.0 * jnp.log(jnp.maximum(jnp.cos(jnp.minimum(z, math.pi / 2.0)), 1e-30))
-        return c, blocked
-    raise ValueError(f"unknown cost {cost!r}")
+    return _cost_from_sq(sq, cost, eta)
 
 
 def _matvec_kernel(x_ref, y_ref, v_ref, o_ref, *, eps: float, cost: str, eta: float):

@@ -1,0 +1,84 @@
+"""Gathered Gibbs-kernel evaluation Pallas kernel (TPU target).
+
+The matrix-free Spar-Sink path works on an O(s) list of ``(row, col)``
+index pairs instead of an (n, m) array. Given the two support-point blocks
+*already gathered* at those pairs (XLA owns the gather; see
+``repro.kernels.ops.gathered_kernel``), this kernel streams (Bs, d) chunks
+through VMEM and emits, per pair,
+
+* ``K_e = exp(-C(x_i, y_j) / eps)``   — the sketch's kernel values, and
+* ``C_e = C(x_i, y_j)``               — the raw cost (sparse objective),
+
+in O(s d) HBM traffic. Cost functions are the static switch shared with
+``fused_sinkhorn._cost_tile`` (squared euclidean / WFR); WFR blocked pairs
+(``d >= pi * eta``) map to exactly ``K_e = 0`` and ``C_e = +inf``.
+
+Block shape: (block_s, d_pad) with d padded to a multiple of 128 and
+``block_s`` a multiple of 8 (f32 sublane tiling); everything is VPU
+element-wise work, no MXU involved.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_sinkhorn import _cost_from_sq
+
+__all__ = ["gathered_kernel_call"]
+
+
+def _gathered_kernel(x_ref, y_ref, k_ref, c_ref, *, eps: float, cost: str, eta: float):
+    x = x_ref[...]  # (Bs, d)
+    y = y_ref[...]  # (Bs, d)
+    sq = jnp.maximum(
+        jnp.sum(x * x, axis=-1, keepdims=True)
+        + jnp.sum(y * y, axis=-1, keepdims=True)
+        - 2.0 * jnp.sum(x * y, axis=-1, keepdims=True),
+        0.0,
+    )  # (Bs, 1) row-wise squared distances
+    c, blocked = _cost_from_sq(sq, cost, eta)
+    k = jnp.exp(-c / eps)
+    if blocked is not None:
+        k = jnp.where(blocked, 0.0, k)
+        c = jnp.where(blocked, jnp.inf, c)
+    k_ref[...] = k
+    c_ref[...] = c
+
+
+def gathered_kernel_call(
+    xg: jax.Array,
+    yg: jax.Array,
+    *,
+    eps: float,
+    cost: str = "sqeuclidean",
+    eta: float = 1.0,
+    block_s: int = 1024,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw pallas_call (pre-gathered, pre-padded inputs: ``xg``/``yg`` are
+    (S, d) support points at the sampled pairs, S % block_s == 0,
+    d % 128 == 0). Returns ``(K_e, C_e)``, each (S, 1). Use
+    ``repro.kernels.ops.gathered_kernel`` for the gather + padding."""
+    s, d = xg.shape
+    grid = (s // block_s,)
+    kern = functools.partial(_gathered_kernel, eps=eps, cost=cost, eta=eta)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, 1), jnp.float32),
+            jax.ShapeDtypeStruct((s, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xg, yg)

@@ -24,6 +24,7 @@ __all__ = [
     "batched_coo_matvec",
     "batched_coo_rmatvec",
     "fused_sinkhorn_solve",
+    "gathered_kernel",
     "lru_scan",
 ]
 
@@ -105,6 +106,42 @@ def online_lse(
     return out[:n, 0]
 
 
+@functools.partial(
+    jax.jit, static_argnames=("eps", "cost", "eta", "block_s", "interpret")
+)
+def gathered_kernel(
+    x: jax.Array,
+    y: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    eps: float,
+    cost: str = "sqeuclidean",
+    eta: float = 1.0,
+    block_s: int = 1024,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """``(K_e, C_e) = (exp(-C(x_i,y_j)/eps), C(x_i,y_j))`` at k index pairs.
+
+    The matrix-free sketch's kernel evaluation: XLA gathers the two
+    support-point blocks (O(k d) HBM traffic), the Pallas kernel fuses the
+    cost + exponential per (block_s, d) VMEM chunk. WFR blocked pairs map
+    to exactly ``(0, +inf)``. Shapes: (n,d),(m,d),(k,),(k,) -> ((k,),(k,)).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    k = rows.shape[0]
+    dp = _round_up(x.shape[1], 128)
+    kp = _round_up(max(k, 1), block_s)
+    xg = _pad_to(_pad_to(x.astype(jnp.float32)[rows], dp, 1), kp, 0)
+    yg = _pad_to(_pad_to(y.astype(jnp.float32)[cols], dp, 1), kp, 0)
+    from repro.kernels.gather_kernel import gathered_kernel_call
+
+    k_e, c_e = gathered_kernel_call(
+        xg, yg, eps=eps, cost=cost, eta=eta, block_s=block_s, interpret=interpret
+    )
+    return k_e[:k, 0], c_e[:k, 0]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def block_ell_matvec(
     vals: jax.Array,
@@ -155,9 +192,14 @@ def batched_block_ell_matvec(
     return out.reshape(bsz, nrb * bk)
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
+@functools.partial(jax.jit, static_argnames=("n", "indices_are_sorted"))
 def batched_coo_matvec(
-    rows: jax.Array, vals: jax.Array, v_gathered: jax.Array, *, n: int | None = None
+    rows: jax.Array,
+    vals: jax.Array,
+    v_gathered: jax.Array,
+    *,
+    n: int | None = None,
+    indices_are_sorted: bool = False,
 ) -> jax.Array:
     """B independent padded-COO mat-vec reductions as one flat segment-sum.
 
@@ -165,23 +207,38 @@ def batched_coo_matvec(
     gathered right factor ``take_along_axis(v, cols, 1)`` (callers own the
     gather so the transpose direction reuses this same reduction). Disjoint
     per-element segments keep results bitwise those of B separate
-    `repro.core.sparsify.coo_matvec` calls. Returns (B, n).
+    `repro.core.sparsify.coo_matvec` calls. With per-element-sorted ids
+    (the `sparsify_coo` construction invariant) the flat concatenation is
+    sorted too, so pass ``indices_are_sorted=True`` for the faster scatter.
+    Returns (B, n).
     """
     bsz, _ = rows.shape
     if n is None:
         raise TypeError("batched_coo_matvec requires n (static output width)")
     seg = (rows + (jnp.arange(bsz, dtype=jnp.int32) * n)[:, None]).ravel()
     out = jax.ops.segment_sum(
-        (vals * v_gathered).ravel(), seg, num_segments=bsz * n
+        (vals * v_gathered).ravel(),
+        seg,
+        num_segments=bsz * n,
+        indices_are_sorted=indices_are_sorted,
     )
     return out.reshape(bsz, n)
 
 
 def batched_coo_rmatvec(
-    cols: jax.Array, vals: jax.Array, u_gathered: jax.Array, *, m: int | None = None
+    cols: jax.Array,
+    vals: jax.Array,
+    u_gathered: jax.Array,
+    *,
+    m: int | None = None,
+    indices_are_sorted: bool = False,
 ) -> jax.Array:
-    """Transpose counterpart of `batched_coo_matvec` (segment over columns)."""
-    return batched_coo_matvec(cols, vals, u_gathered, n=m)
+    """Transpose counterpart of `batched_coo_matvec` (segment over columns).
+    For sorted scatter, callers pass the col-sorted permutation of all three
+    arrays (``take_along_axis(., sketch.csort, 1)``)."""
+    return batched_coo_matvec(
+        cols, vals, u_gathered, n=m, indices_are_sorted=indices_are_sorted
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,12 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["online_matvec_ref", "online_lse_ref", "block_ell_matvec_ref"]
+__all__ = [
+    "online_matvec_ref",
+    "online_lse_ref",
+    "block_ell_matvec_ref",
+    "gathered_kernel_ref",
+]
 
 
 def _cost(x, y, cost: str, eta: float):
@@ -62,6 +67,28 @@ def online_lse_ref(
         z = jnp.where(blocked, -jnp.inf, z)
     out = jax.scipy.special.logsumexp(z, axis=1)
     return jnp.where(jnp.isneginf(out), -1e30, out)
+
+
+def gathered_kernel_ref(
+    x: jax.Array,
+    y: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    *,
+    eps: float,
+    cost: str = "sqeuclidean",
+    eta: float = 1.0,
+) -> tuple[jax.Array, jax.Array]:
+    """(K_e, C_e) at the index pairs with C fully materialized; WFR blocked
+    pairs come out (0, +inf) — the gathered-kernel contract."""
+    c, blocked = _cost(x, y, cost, eta)
+    c_e = c[rows, cols]
+    k_e = jnp.exp(-c_e / eps)
+    if blocked is not None:
+        b_e = blocked[rows, cols]
+        k_e = jnp.where(b_e, 0.0, k_e)
+        c_e = jnp.where(b_e, jnp.inf, c_e)
+    return k_e, c_e
 
 
 def block_ell_matvec_ref(

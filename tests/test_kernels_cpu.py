@@ -19,10 +19,16 @@ from repro.kernels import (
     batched_block_ell_matvec,
     batched_coo_matvec,
     batched_coo_rmatvec,
+    gathered_kernel,
 )
 from repro.kernels.block_ell import block_ell_matvec_call
 from repro.kernels.fused_sinkhorn import online_lse_call
-from repro.kernels.ref import block_ell_matvec_ref, online_lse_ref
+from repro.kernels.gather_kernel import gathered_kernel_call
+from repro.kernels.ref import (
+    block_ell_matvec_ref,
+    gathered_kernel_ref,
+    online_lse_ref,
+)
 
 NEG_INF = -1e30
 
@@ -82,6 +88,78 @@ def test_online_lse_call_wfr_fully_blocked_row_stays_neg_inf():
     out = np.asarray(out[:, 0])
     assert out[0] <= NEG_INF / 2  # fully blocked row: -inf sentinel
     assert np.all(np.isfinite(out[1:])) and np.all(out[1:] > NEG_INF / 2)
+
+
+# --------------------------------------------------------------------------
+# gathered_kernel_call (raw) — the matrix-free (K_e, C_e) evaluation
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(1024, 128), (2048, 256)])
+def test_gathered_kernel_call_sqeuclidean(shape):
+    s, d = shape
+    n, m = 300, 200
+    kx, ky = jax.random.split(jax.random.PRNGKey(s), 2)
+    x, y = _points(kx, n, d), _points(ky, m, d)
+    rng = np.random.default_rng(s)
+    rows = jnp.asarray(rng.integers(0, n, s), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, m, s), jnp.int32)
+    k_out, c_out = gathered_kernel_call(
+        x[rows], y[cols], eps=0.05, block_s=512, interpret=True
+    )
+    k_ref, c_ref = gathered_kernel_ref(x, y, rows, cols, eps=0.05)
+    np.testing.assert_allclose(np.asarray(c_out[:, 0]), np.asarray(c_ref),
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k_out[:, 0]), np.asarray(k_ref),
+                               rtol=2e-3, atol=1e-6)
+
+
+def test_gathered_kernel_call_wfr_blocked_is_exactly_zero():
+    """WFR pairs beyond range pi*eta must come out K_e = 0 exactly and
+    C_e = +inf (the blocked branch of the matrix-free sketch)."""
+    s, d = 1024, 128
+    rng = np.random.default_rng(3)
+    # two clusters further apart than the transport range
+    x = np.zeros((256, d), np.float32)
+    x[:128, 0] = rng.uniform(0.0, 0.2, 128)
+    x[128:, 0] = rng.uniform(1.8, 2.0, 128)
+    x = jnp.asarray(x)
+    eta = 0.2
+    rows = jnp.asarray(rng.integers(0, 256, s), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, 256, s), jnp.int32)
+    k_out, c_out = gathered_kernel_call(
+        x[rows], x[cols], eps=0.1, cost="wfr", eta=eta, block_s=512,
+        interpret=True,
+    )
+    k_ref, c_ref = gathered_kernel_ref(x, x, rows, cols, eps=0.1, cost="wfr",
+                                       eta=eta)
+    blocked = np.isinf(np.asarray(c_ref))
+    assert 0.1 < blocked.mean() < 0.9  # branch genuinely taken
+    np.testing.assert_array_equal(np.asarray(k_out[:, 0])[blocked], 0.0)
+    assert np.all(np.isinf(np.asarray(c_out[:, 0])[blocked]))
+    ok = ~blocked
+    np.testing.assert_allclose(np.asarray(k_out[:, 0])[ok],
+                               np.asarray(k_ref)[ok], rtol=2e-3, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_out[:, 0])[ok],
+                               np.asarray(c_ref)[ok], rtol=2e-3, atol=1e-5)
+
+
+def test_gathered_kernel_wrapper_pads_and_slices():
+    """The public wrapper handles arbitrary (k, d): pads to block-aligned
+    shapes, gathers, and slices the padding away."""
+    n, m, d, k = 100, 80, 5, 777  # nothing aligned
+    kx, ky = jax.random.split(jax.random.PRNGKey(0), 2)
+    x, y = _points(kx, n, d), _points(ky, m, d)
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, n, k), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, m, k), jnp.int32)
+    k_e, c_e = gathered_kernel(x, y, rows, cols, eps=0.1, interpret=True)
+    assert k_e.shape == (k,) and c_e.shape == (k,)
+    k_ref, c_ref = gathered_kernel_ref(x, y, rows, cols, eps=0.1)
+    np.testing.assert_allclose(np.asarray(k_e), np.asarray(k_ref), rtol=2e-3,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(c_e), np.asarray(c_ref), rtol=2e-4,
+                               atol=1e-5)
 
 
 # --------------------------------------------------------------------------

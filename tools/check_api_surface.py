@@ -1,11 +1,11 @@
 """Guard the redesigned public API surface against silent drift.
 
 Asserts that each guarded module's ``__all__`` (``repro.core``,
-``repro.core.api``, ``repro.batch``) exactly matches the actually-exported
-public names: every declared name must resolve, every resolvable public
-name must be declared, no duplicates, and the list must stay sorted. Run
-directly (exit code 1 on drift) or through the tier-1 test in
-``tests/test_api.py``:
+``repro.core.api``, ``repro.batch``, ``repro.kernels``) exactly matches
+the actually-exported public names: every declared name must resolve,
+every resolvable public name must be declared, no duplicates, and the
+list must stay sorted. Run directly (exit code 1 on drift) or through the
+tier-1 test in ``tests/test_api.py``:
 
     PYTHONPATH=src python tools/check_api_surface.py
 """
@@ -15,7 +15,7 @@ import importlib
 import sys
 import types
 
-MODULES = ("repro.core", "repro.core.api", "repro.batch")
+MODULES = ("repro.core", "repro.core.api", "repro.batch", "repro.kernels")
 
 
 def check_module(modname: str) -> list[str]:
