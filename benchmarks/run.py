@@ -4,10 +4,11 @@ Emits ``name,us_per_call,derived`` CSV on stdout (progress on stderr).
 Full-size variants: ``python -m benchmarks.bench_<x> --full``.
 
 ``--emit-json [DIR]`` runs the machine-readable perf suites (batched
-dispatch + time-vs-n + matrix-free scaling) and writes standardized
-``BENCH_batch.json`` / ``BENCH_time.json`` / ``BENCH_scale.json``
-(schema ``repro-bench-v1``: method, n, B, wall-time, RMAE per row) so the
-perf trajectory stays comparable across PRs.
+dispatch + time-vs-n + matrix-free scaling + RMAE-vs-eps) and writes
+standardized ``BENCH_batch.json`` / ``BENCH_time.json`` /
+``BENCH_scale.json`` / ``BENCH_eps.json`` (schema ``repro-bench-v1``:
+method, n, B, wall-time, RMAE per row) so the perf trajectory stays
+comparable across PRs.
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ import time
 
 
 def _emit_json(out_dir: str) -> None:
-    from benchmarks import bench_batch, bench_scale, bench_time, common
+    from benchmarks import bench_batch, bench_rmae_vs_eps, bench_scale, bench_time, common
 
     os.makedirs(out_dir, exist_ok=True)
     print(f"--- batch (JSON -> {out_dir}) ---", file=sys.stderr)
@@ -30,6 +31,10 @@ def _emit_json(out_dir: str) -> None:
     print("--- matrix-free scale sweep (JSON) ---", file=sys.stderr)
     bench_scale.run()
     common.write_json(os.path.join(out_dir, "BENCH_scale.json"), "scale")
+    print("--- RMAE vs eps sweep (JSON) ---", file=sys.stderr)
+    bench_rmae_vs_eps.run(n=256, n_rep=4)
+    bench_rmae_vs_eps.run(n=256, n_rep=4, lam=0.5)
+    common.write_json(os.path.join(out_dir, "BENCH_eps.json"), "eps")
 
 
 def main() -> None:
@@ -53,6 +58,7 @@ def main() -> None:
         bench_echo,
         bench_rmae_ot,
         bench_rmae_uot,
+        bench_rmae_vs_eps,
         bench_rmae_vs_n,
         bench_roofline,
         bench_router,
@@ -67,6 +73,8 @@ def main() -> None:
         ("fig3 (RMAE UOT vs s)", lambda: bench_rmae_uot.run(
             patterns=("C1",), regimes=("R2",), n=500, mults=(2, 8), n_rep=4)),
         ("fig4 (RMAE vs n)", lambda: bench_rmae_vs_n.run(ns=(400, 800), n_rep=4)),
+        ("rmae vs eps (log-domain sparse)", lambda: bench_rmae_vs_eps.run(
+            eps_grid=(1e-1, 1e-3), n=192, n_rep=3, max_iter=2000)),
         ("fig5 (time vs n)", lambda: bench_time.run(ns=(800, 1600, 3200))),
         ("scale (matrix-free vs dense sketch)", lambda: bench_scale.run(
             ns=(2 ** 10, 2 ** 11, 2 ** 12), n_rep=2)),

@@ -26,10 +26,14 @@ from repro.batch.solvers import (
     batched_coo_sketch,
     batched_log_loop,
     batched_scaling_loop,
+    batched_sparse_log_loop,
+    build_batched_log_sketch,
+    build_batched_mf_log_sketch,
     build_batched_mf_sketch,
     build_batched_sketch,
     get_batched_solver,
     register_batched_solver,
+    sparse_log_potentials,
 )
 
 __all__ = [
@@ -41,10 +45,14 @@ __all__ = [
     "batched_coo_sketch",
     "batched_log_loop",
     "batched_scaling_loop",
+    "batched_sparse_log_loop",
     "bucket_shape",
+    "build_batched_log_sketch",
+    "build_batched_mf_log_sketch",
     "build_batched_mf_sketch",
     "build_batched_sketch",
     "get_batched_solver",
     "group_by_bucket",
     "register_batched_solver",
+    "sparse_log_potentials",
 ]

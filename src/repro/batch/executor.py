@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from repro.batch.problems import BatchedProblem, bucket_shape, group_by_bucket
 from repro.batch.solvers import (
     BatchedResult,
+    build_batched_log_sketch,
+    build_batched_mf_log_sketch,
     build_batched_mf_sketch,
     build_batched_sketch,
     get_batched_solver,
@@ -41,14 +43,17 @@ from repro.core.sinkhorn import (
     plan_from_potentials,
     plan_from_scalings,
 )
+from repro.core.spar_sink import log_plan_entries
+from repro.core.sparsify import LogSparseKernelCOO
 
 __all__ = ["BucketedExecutor"]
 
-_NEEDS_KEY = frozenset({"spar_sink_coo", "spar_sink_mf"})
+_NEEDS_KEY = frozenset({"spar_sink_coo", "spar_sink_log", "spar_sink_mf"})
 _LOG_DOMAIN = frozenset({"log"})
 # methods whose batched kernel never reads bp.cost: the batch is assembled
-# without the (B, n, m) array (matrix-free end to end)
-_MATRIX_FREE = frozenset({"spar_sink_mf"})
+# without the (B, n, m) array (matrix-free end to end; spar_sink_log's
+# sketch build reads the per-problem dense cost but ships gathered costs)
+_COSTLESS = frozenset({"spar_sink_log", "spar_sink_mf"})
 
 
 def _next_pow2(v: int) -> int:
@@ -173,17 +178,13 @@ class BucketedExecutor:
             bp = BatchedProblem.from_problems(
                 group + [group[-1]] * pad,
                 bucket=bucket,
-                materialize_cost=method not in _MATRIX_FREE,
+                materialize_cost=method not in _COSTLESS,
             )
             if sketch_args is not None:
                 # build only the unique sketches (the O(n m) part — O(s) on
                 # the matrix-free path); pad slots reuse the last element's
                 # arrays instead of redrawing an identical sketch per slot
-                build = (
-                    build_batched_mf_sketch
-                    if method in _MATRIX_FREE
-                    else build_batched_sketch
-                )
+                build = self._sketch_builder(method, solver_opts)
                 aux = build(group, gkeys, *sketch_args)
                 if pad:
                     aux = jax.tree_util.tree_map(
@@ -196,34 +197,69 @@ class BucketedExecutor:
                 aux = None
             bp, aux = self._place(bp, aux)
             br = self._compiled(bucket, method, solver_opts)(bp, aux)
+            log_sparse = method == "spar_sink_log" or (
+                method == "spar_sink_mf" and bool(solver_opts.get("stabilize"))
+            )
             for j, i in enumerate(idxs):
-                out[i] = self._solution(method, problems[i], br, j)
+                out[i] = self._solution(method, problems[i], br, j, log_sparse)
         return out  # type: ignore[return-value]
+
+    @staticmethod
+    def _sketch_builder(method: str, solver_opts: dict):
+        """Sketch-construction strategy per method (+ static options)."""
+        if method == "spar_sink_log":
+            return build_batched_log_sketch
+        if method == "spar_sink_mf":
+            if solver_opts.get("stabilize"):
+                return build_batched_mf_log_sketch
+            return build_batched_mf_sketch
+        return build_batched_sketch
 
     # ------------------------------------------------------------ assembly
 
     def _solution(
-        self, method: str, problem: OTProblem, br: BatchedResult, j: int
+        self,
+        method: str,
+        problem: OTProblem,
+        br: BatchedResult,
+        j: int,
+        log_sparse: bool = False,
     ) -> Solution:
         n, m = problem.shape
-        res = SinkhornResult(br.u[j, :n], br.v[j, :m], br.n_iter[j], br.err[j])
+        status = br.status[j] if br.status is not None else None
+        res = SinkhornResult(
+            br.u[j, :n], br.v[j, :m], br.n_iter[j], br.err[j], status
+        )
         if br.rows is not None:
             rows, cols, vals, nnz = br.rows[j], br.cols[j], br.vals[j], br.nnz[j]
 
             # everything the thunk needs is bound as defaults so a long-lived
             # Solution pins only its own O(cap) slices, not the whole batch
-            def sparse_plan(res=res, rows=rows, cols=cols, vals=vals, nnz=nnz,
-                            n=n, m=m):
-                return SparsePlan(
-                    rows, cols, res.u[rows] * vals * res.v[cols], nnz, n, m
-                )
+            if log_sparse:
+                # vals carry logvals; plan entries come from the potentials
+                eps = float(problem.eps)
+
+                def sparse_plan(res=res, rows=rows, cols=cols, vals=vals,
+                                nnz=nnz, n=n, m=m, eps=eps):
+                    sk = LogSparseKernelCOO(rows, cols, vals, nnz, n, m)
+                    return SparsePlan(
+                        rows, cols, log_plan_entries(sk, res, eps), nnz, n, m
+                    )
+
+            else:
+
+                def sparse_plan(res=res, rows=rows, cols=cols, vals=vals,
+                                nnz=nnz, n=n, m=m):
+                    return SparsePlan(
+                        rows, cols, res.u[rows] * vals * res.v[cols], nnz, n, m
+                    )
 
             return Solution(
                 method=method,
                 problem=problem,
                 value=br.value[j],
                 result=res,
-                domain="scaling",
+                domain="log" if log_sparse else "scaling",
                 nnz=nnz,
                 overflowed=(
                     br.overflowed[j] if br.overflowed is not None else None

@@ -1,12 +1,18 @@
 """Batched solver kernels: whole-batch jit programs over `BatchedProblem`.
 
-Three registered batched methods mirror the per-problem registry paths:
+Five registered batched methods mirror the per-problem registry paths:
 
 * ``dense``         — scaling-domain Sinkhorn on the (B, n, m) Gibbs kernels
 * ``log``           — log-domain Sinkhorn on the (B, n, m) log-kernels
 * ``spar_sink_coo`` — paper Alg. 3/4 on a fixed-cap batched COO sketch:
                       one ``(B, cap)`` index/value array, per-problem PRNG
                       keys, one segment-sum mat-vec pair per iteration
+* ``spar_sink_log`` — the same sketch carried in **log space** (``vals`` =
+                      logvals), iterated by batched segment-logsumexp on
+                      potentials: small-``eps`` safe (`sparse_log_potentials`
+                      is also the per-problem kernel, so results are bitwise)
+* ``spar_sink_mf``  — matrix-free sketches; ``stabilize=True`` switches it
+                      to the log-domain iteration too
 
 The iteration loops are *per-element frozen* versions of
 :func:`repro.core.sinkhorn.generic_scaling_loop` /
@@ -38,6 +44,8 @@ import jax.numpy as jnp
 from repro.batch.problems import BatchedProblem
 from repro.core import sparsify
 from repro.core.sinkhorn import (
+    _masked_log,
+    _status_code,
     kl_divergence,
     ot_cost_from_plan,
     uot_cost_from_plan,
@@ -51,10 +59,14 @@ __all__ = [
     "batched_coo_sketch",
     "batched_log_loop",
     "batched_scaling_loop",
+    "batched_sparse_log_loop",
+    "build_batched_log_sketch",
+    "build_batched_mf_log_sketch",
     "build_batched_mf_sketch",
     "build_batched_sketch",
     "get_batched_solver",
     "register_batched_solver",
+    "sparse_log_potentials",
 ]
 
 
@@ -92,9 +104,11 @@ class BatchedResult(NamedTuple):
     value: jax.Array  # (B,) entropic objective estimates
     rows: jax.Array | None = None  # (B, cap) int32
     cols: jax.Array | None = None  # (B, cap) int32
-    vals: jax.Array | None = None  # (B, cap) sketch kernel values
+    vals: jax.Array | None = None  # (B, cap) sketch kernel values (logvals
+    #                                on the spar_sink_log / stabilized path)
     nnz: jax.Array | None = None  # (B,) int32
     overflowed: jax.Array | None = None  # (B,) bool — sketch draw truncated
+    status: jax.Array | None = None  # (B,) int32 STATUS_* convergence codes
 
 
 # --------------------------------------------------------------------------
@@ -124,15 +138,17 @@ def batched_scaling_loop(
     """Scaling-domain Sinkhorn over a batch; ``matvec: (B, m) -> (B, n)``.
 
     Each element follows exactly the per-problem loop (stopping rule,
-    stall detection) and is frozen once it stops; the while_loop exits when
-    the whole batch is done. Extra wall-clock cost vs the slowest element
-    is zero — frozen elements' updates are computed but discarded.
+    stall detection, non-finite exit) and is frozen once it stops; the
+    while_loop exits when the whole batch is done. Extra wall-clock cost vs
+    the slowest element is zero — frozen elements' updates are computed but
+    discarded. Returns ``(u, v, n_iter, err, status)`` with per-element
+    ``STATUS_*`` codes, like the per-problem `generic_scaling_loop`.
     """
     B, n = a.shape
     m = b.shape[1]
     u0 = jnp.ones((B, n), a.dtype)
     v0 = jnp.ones((B, m), b.dtype)
-    big = jnp.full((B,), jnp.inf, a.dtype)
+    big = jnp.full((B,), jnp.finfo(a.dtype).max, a.dtype)
     fe_col = fe[:, None]
 
     def cond(state):
@@ -157,7 +173,13 @@ def batched_scaling_loop(
         best = jnp.where(active, best_new, best)
         since = jnp.where(active, since_new, since)
         t = jnp.where(active, t + 1, t)
-        active = active & (err > tol) & (t < max_iter) & (since < patience)
+        active = (
+            active
+            & (err > tol)
+            & jnp.isfinite(err)
+            & (t < max_iter)
+            & (since < patience)
+        )
         return u, v, t, err, best, since, active
 
     state = (
@@ -169,8 +191,14 @@ def batched_scaling_loop(
         jnp.zeros((B,), jnp.int32),
         jnp.ones((B,), bool),
     )
-    u, v, t, err, _, _, _ = jax.lax.while_loop(cond, body, state)
-    return u, v, t, err
+    u, v, t, err, _, since, _ = jax.lax.while_loop(cond, body, state)
+    bad = ~(
+        jnp.isfinite(err)
+        & jnp.all(jnp.isfinite(u), axis=-1)
+        & jnp.all(jnp.isfinite(v), axis=-1)
+    )
+    degenerate = (jnp.max(u, axis=-1) <= 0.0) | (jnp.max(v, axis=-1) <= 0.0)
+    return u, v, t, err, _status_code(bad, degenerate, err, tol, since >= patience)
 
 
 def batched_log_loop(
@@ -185,7 +213,8 @@ def batched_log_loop(
     max_iter: int = 1000,
 ):
     """Log-domain Sinkhorn over a batch on potentials; per-element freezing.
-    ``lse_row(g): (B, m) -> (B, n)`` and vice versa; ``eps``/``fe`` are (B,)."""
+    ``lse_row(g): (B, m) -> (B, n)`` and vice versa; ``eps``/``fe`` are (B,).
+    Returns ``(f, g, n_iter, err, status)`` with per-element ``STATUS_*``."""
     B, n = loga.shape
     m = logb.shape[1]
     f0 = jnp.zeros((B, n), loga.dtype)
@@ -222,7 +251,106 @@ def batched_log_loop(
         jnp.ones((B,), bool),
     )
     f, g, t, err, _ = jax.lax.while_loop(cond, body, state)
-    return f, g, t, err
+    return f, g, t, err, _batched_log_status(f, g, err, tol)
+
+
+def _batched_log_status(
+    f: jax.Array,
+    g: jax.Array,
+    err: jax.Array,
+    tol: float,
+    stalled: jax.Array | bool = False,
+) -> jax.Array:
+    """Per-element mirror of `repro.core.sinkhorn._log_domain_status`."""
+    bad = (
+        jnp.isnan(err)
+        | jnp.any(jnp.isnan(f) | (f == jnp.inf), axis=-1)
+        | jnp.any(jnp.isnan(g) | (g == jnp.inf), axis=-1)
+    )
+    degenerate = jnp.all(jnp.isneginf(f), axis=-1) | jnp.all(
+        jnp.isneginf(g), axis=-1
+    )
+    return _status_code(bad, degenerate, err, tol, stalled)
+
+
+def batched_sparse_log_loop(
+    lse_row: Callable[[jax.Array], jax.Array],
+    lse_col: Callable[[jax.Array], jax.Array],
+    loga: jax.Array,
+    logb: jax.Array,
+    eps: jax.Array,
+    fe: jax.Array,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+    patience: int = 100,
+):
+    """Per-element-frozen mirror of
+    :func:`repro.core.sinkhorn.generic_sparse_log_loop`: log-domain
+    Sinkhorn on B sparse (sketched) kernels, with the sketch conventions —
+    atoms whose sparse logsumexp is ``-inf`` get pinned to ``-inf``
+    (covers dead rows *and* inert bucket padding, which starts pinned), and
+    the scaling loop's stall detection on the column-marginal violation.
+    Each element reproduces the per-problem trajectory exactly.
+    Returns ``(f, g, n_iter, err, status)``.
+    """
+    B, n = loga.shape
+    m = logb.shape[1]
+    neg_inf_a = jnp.isneginf(loga)
+    neg_inf_b = jnp.isneginf(logb)
+    f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.zeros((B, n), loga.dtype))
+    g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.zeros((B, m), logb.dtype))
+    big = jnp.full((B,), jnp.finfo(loga.dtype).max, loga.dtype)
+    scale = (fe * eps)[:, None]
+    eps_col = eps[:, None]
+    b_lin = jnp.exp(logb)
+
+    def cond(state):
+        return jnp.any(state[-1])
+
+    def body(state):
+        f, g, t, err, best, since, active = state
+        lr = lse_row(g)
+        f_new = scale * (loga - lr)
+        f_new = jnp.where(neg_inf_a | jnp.isneginf(lr), -jnp.inf, f_new)
+        lc = lse_col(f_new)
+        g_new = scale * (logb - lc)
+        g_new = jnp.where(neg_inf_b | jnp.isneginf(lc), -jnp.inf, g_new)
+        df = jnp.where(
+            jnp.isneginf(f_new) & jnp.isneginf(f), 0.0, jnp.abs(f_new - f)
+        )
+        dg = jnp.where(
+            jnp.isneginf(g_new) & jnp.isneginf(g), 0.0, jnp.abs(g_new - g)
+        )
+        err_new = jnp.max(df, axis=-1) + jnp.max(dg, axis=-1)
+        col_marg = jnp.where(
+            jnp.isneginf(g) | jnp.isneginf(lc), 0.0, jnp.exp(g / eps_col + lc)
+        )
+        marg = jnp.sum(jnp.abs(col_marg - b_lin), axis=-1)
+        improved = marg < best * (1.0 - 1e-4)
+        best_new = jnp.minimum(best, marg)
+        since_new = jnp.where(improved, 0, since + 1)
+        keep = active[:, None]
+        f = jnp.where(keep, f_new, f)
+        g = jnp.where(keep, g_new, g)
+        err = jnp.where(active, err_new, err)
+        best = jnp.where(active, best_new, best)
+        since = jnp.where(active, since_new, since)
+        t = jnp.where(active, t + 1, t)
+        active = active & (err > tol) & (t < max_iter) & (since < patience)
+        return f, g, t, err, best, since, active
+
+    state = (
+        f0,
+        g0,
+        jnp.zeros((B,), jnp.int32),
+        big,
+        big,
+        jnp.zeros((B,), jnp.int32),
+        jnp.ones((B,), bool),
+    )
+    f, g, t, err, _, since, _ = jax.lax.while_loop(cond, body, state)
+    return f, g, t, err, _batched_log_status(f, g, err, tol, since >= patience)
 
 
 # --------------------------------------------------------------------------
@@ -230,8 +358,8 @@ def batched_log_loop(
 # --------------------------------------------------------------------------
 
 
-def _masked_log(x: jax.Array) -> jax.Array:
-    return jnp.where(x > 0, jnp.log(jnp.where(x > 0, x, 1.0)), -jnp.inf)
+# (_masked_log is imported from repro.core.sinkhorn: one masked-log
+# implementation repo-wide, so loga/logb bits match between serving modes)
 
 
 def _batched_value_from_plan(bp: BatchedProblem, T: jax.Array) -> jax.Array:
@@ -300,7 +428,7 @@ def batched_solve_dense(
     """Scaling-domain Sinkhorn on B dense Gibbs kernels at once."""
     del keys
     K = bp.kernel()
-    u, v, t, err = batched_scaling_loop(
+    u, v, t, err, status = batched_scaling_loop(
         lambda vv: jnp.einsum("bnm,bm->bn", K, vv),
         lambda uu: jnp.einsum("bnm,bn->bm", K, uu),
         bp.a,
@@ -310,7 +438,9 @@ def batched_solve_dense(
         max_iter=max_iter,
     )
     T = u[:, :, None] * K * v[:, None, :]
-    return BatchedResult(u, v, t, err, _batched_value_from_plan(bp, T))
+    return BatchedResult(
+        u, v, t, err, _batched_value_from_plan(bp, T), status=status
+    )
 
 
 @register_batched_solver("log")
@@ -324,7 +454,7 @@ def batched_solve_log(
     """Log-domain Sinkhorn on B log-kernels; returns potentials ``(f, g)``."""
     del keys
     logK = bp.log_kernel()
-    f, g, t, err = batched_log_loop(
+    f, g, t, err, status = batched_log_loop(
         lambda gg: jax.scipy.special.logsumexp(
             logK + gg[:, None, :] / bp.eps[:, None, None], axis=2
         ),
@@ -340,7 +470,9 @@ def batched_solve_log(
     )
     logT = logK + f[:, :, None] / bp.eps[:, None, None] + g[:, None, :] / bp.eps[:, None, None]
     T = jnp.where(jnp.isneginf(logT), 0.0, jnp.exp(logT))
-    return BatchedResult(f, g, t, err, _batched_value_from_plan(bp, T))
+    return BatchedResult(
+        f, g, t, err, _batched_value_from_plan(bp, T), status=status
+    )
 
 
 def build_batched_sketch(
@@ -386,6 +518,50 @@ def build_batched_mf_sketch(
         rows=jnp.stack([sk.rows for sk in sks]),
         cols=jnp.stack([sk.cols for sk in sks]),
         vals=jnp.stack([sk.vals for sk in sks]),
+        nnz=jnp.stack([sk.nnz for sk in sks]),
+        csort=jnp.stack([sk.csort for sk in sks]),
+        overflowed=jnp.stack([sk.overflowed for sk in sks]),
+        cost_e=jnp.stack([c_e for _, c_e in built]),
+    )
+
+
+def build_batched_log_sketch(
+    problems, keys, s: float, cap: int | None = None
+) -> BatchedSketch:
+    """Stack per-problem **log-space** sketches (`build_coo_log_sketch`):
+    the ``vals`` field carries ``logvals`` (padding ``-inf``) and the
+    gathered raw costs ride along in ``cost_e``, so the batched
+    ``spar_sink_log`` solve never exponentiates ``-C/eps`` nor touches a
+    (B, n, m) kernel. Each element's draw is bitwise the per-problem
+    ``solve(..., method="spar_sink_log")`` sketch for the same PRNG key."""
+    from repro.core.api.solvers import build_coo_log_sketch
+
+    cap = default_cap(s) if cap is None else cap
+    built = [build_coo_log_sketch(p, k, s, cap=cap) for p, k in zip(problems, keys)]
+    return _stack_log_sketches(built)
+
+
+def build_batched_mf_log_sketch(
+    problems, keys, s: float, cap: int | None = None
+) -> BatchedSketch:
+    """Stack per-problem **matrix-free log-space** sketches
+    (`build_mf_log_sketch`): `build_batched_mf_sketch`'s contract (pure
+    `PointCloudGeometry` gathered evaluation, nothing O(n m) anywhere) with
+    ``vals`` carrying ``logvals`` — the batched ``spar_sink_mf`` path with
+    ``stabilize=True``. Bitwise the per-problem sketch per PRNG key."""
+    from repro.core.api.solvers import build_mf_log_sketch
+
+    cap = default_cap(s) if cap is None else cap
+    built = [build_mf_log_sketch(p, k, s, cap=cap) for p, k in zip(problems, keys)]
+    return _stack_log_sketches(built)
+
+
+def _stack_log_sketches(built) -> BatchedSketch:
+    sks = [sk for sk, _ in built]
+    return BatchedSketch(
+        rows=jnp.stack([sk.rows for sk in sks]),
+        cols=jnp.stack([sk.cols for sk in sks]),
+        vals=jnp.stack([sk.logvals for sk in sks]),
         nnz=jnp.stack([sk.nnz for sk in sks]),
         csort=jnp.stack([sk.csort for sk in sks]),
         overflowed=jnp.stack([sk.overflowed for sk in sks]),
@@ -457,7 +633,7 @@ def _batched_sketch_solve(
             indices_are_sorted=True,
         )
 
-    u, v, t, err = batched_scaling_loop(
+    u, v, t, err, status = batched_scaling_loop(
         coo_matvec, coo_rmatvec, bp.a, bp.b, bp.fe, tol=tol, max_iter=max_iter
     )
 
@@ -466,6 +642,25 @@ def _batched_sketch_solve(
         * vals
         * jnp.take_along_axis(v, cols, axis=1)
     )
+    value = _batched_value_from_te(bp, t_e, c_e, rows, cols, n, m)
+    return BatchedResult(
+        u, v, t, err, value, rows, cols, vals, sketch.nnz, sketch.overflowed,
+        status,
+    )
+
+
+def _batched_value_from_te(
+    bp: BatchedProblem,
+    t_e: jax.Array,
+    c_e: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    n: int,
+    m: int,
+) -> jax.Array:
+    """Per-element entropic objective from (B, cap) plan entries + gathered
+    costs — the batched mirror of ``coo_objective_*_entries``, shared by
+    the scaling-domain and log-domain sketch solvers."""
     logt = jnp.log(jnp.where(t_e > 0, t_e, 1.0))
     ent = jnp.sum(jnp.where(t_e > 0, -t_e * (logt - 1.0), 0.0), axis=1)
     tc = jnp.sum(
@@ -477,10 +672,7 @@ def _batched_sketch_solve(
     kl_r = jax.vmap(kl_divergence)(row_m, bp.a)
     kl_c = jax.vmap(kl_divergence)(col_m, bp.b)
     v_uot = tc + bp.lam * (kl_r + kl_c) - bp.eps * ent
-    value = jnp.where(bp.is_balanced, v_ot, v_uot)
-    return BatchedResult(
-        u, v, t, err, value, rows, cols, vals, sketch.nnz, sketch.overflowed
-    )
+    return jnp.where(bp.is_balanced, v_ot, v_uot)
 
 
 @register_batched_solver("spar_sink_coo")
@@ -502,16 +694,139 @@ def batched_solve_spar_sink_mf(
     bp: BatchedProblem,
     sketch: BatchedSketch,
     *,
+    stabilize: bool = False,
     tol: float = 1e-6,
     max_iter: int = 1000,
 ) -> BatchedResult:
     """Matrix-free batched Spar-Sink: the sketch (from
     `build_batched_mf_sketch`) carries its own gathered costs, so
     ``bp.cost`` may be ``None`` (`BatchedProblem.from_problems` with
-    ``materialize_cost=False``) and nothing O(n m) exists anywhere."""
+    ``materialize_cost=False``) and nothing O(n m) exists anywhere.
+    ``stabilize=True`` expects a **log-space** sketch
+    (`build_batched_mf_log_sketch`) and runs the log-domain iteration —
+    the batched mirror of ``solve(..., method="spar_sink_mf",
+    stabilize=True)``, safe at small ``eps``."""
     if sketch.cost_e is None:
         raise ValueError(
             "spar_sink_mf needs a matrix-free sketch with gathered costs; "
             "build it with build_batched_mf_sketch()"
         )
+    if stabilize:
+        return _batched_sketch_log_solve(bp, sketch, tol, max_iter)
     return _batched_sketch_solve(bp, sketch, sketch.cost_e, tol, max_iter)
+
+
+@register_batched_solver("spar_sink_log")
+def batched_solve_spar_sink_log(
+    bp: BatchedProblem,
+    sketch: BatchedSketch,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+) -> BatchedResult:
+    """Log-domain batched Spar-Sink on a log-space sketch
+    (`build_batched_log_sketch`): potential updates through batched sorted
+    segment-logsumexp, bitwise the per-problem ``spar_sink_log`` per
+    element; small-``eps`` safe. ``bp.cost`` is never read (the sketch
+    carries gathered costs), so no (B, n, m) array is materialized."""
+    if sketch.cost_e is None:
+        raise ValueError(
+            "spar_sink_log needs a log-space sketch with gathered costs; "
+            "build it with build_batched_log_sketch()"
+        )
+    return _batched_sketch_log_solve(bp, sketch, tol, max_iter)
+
+
+def sparse_log_potentials(
+    rows: jax.Array,
+    cols: jax.Array,
+    logvals: jax.Array,
+    csort: jax.Array | None,
+    loga: jax.Array,
+    logb: jax.Array,
+    eps: jax.Array,
+    fe: jax.Array,
+    *,
+    n: int,
+    m: int,
+    tol: float,
+    max_iter: int,
+):
+    """Log-domain potentials of B sketched problems — the ONE iteration
+    kernel behind both the per-problem ``spar_sink_log`` /
+    ``spar_sink_mf(stabilize=True)`` solvers (called at B = 1) and the
+    batched executor path.
+
+    Sharing the exact computation matters: the segment-logsumexp contains
+    ``exp``/``log`` whose fused codegen XLA may legally vary by a ulp
+    between differently-shaped programs, while this flat batched reduction
+    is B-invariant — so per-problem and batched results agree **bitwise**
+    per element. Returns ``(f, g, n_iter, err, status)``, all (B, ·).
+    """
+    from repro.kernels.ops import batched_coo_logsumexp
+
+    sorted_ = csort is not None
+    if sorted_:
+        cols_sorted = jnp.take_along_axis(cols, csort, axis=1)
+    eps_col = eps[:, None]
+
+    def lse_row(g):  # (B, m) -> (B, n)
+        y = g / eps_col
+        z = logvals + jnp.take_along_axis(y, cols, axis=1)
+        return batched_coo_logsumexp(rows, z, n=n, indices_are_sorted=sorted_)
+
+    def lse_col(f):  # (B, n) -> (B, m)
+        y = f / eps_col
+        z = logvals + jnp.take_along_axis(y, rows, axis=1)
+        if not sorted_:
+            return batched_coo_logsumexp(cols, z, n=m)
+        return batched_coo_logsumexp(
+            cols_sorted,
+            jnp.take_along_axis(z, csort, axis=1),
+            n=m,
+            indices_are_sorted=True,
+        )
+
+    return batched_sparse_log_loop(
+        lse_row, lse_col, loga, logb, eps, fe, tol=tol, max_iter=max_iter
+    )
+
+
+def _batched_sketch_log_solve(
+    bp: BatchedProblem,
+    sketch: BatchedSketch,
+    tol: float,
+    max_iter: int,
+) -> BatchedResult:
+    """Shared log-domain Spar-Sink core on a fixed-cap batched COO sketch
+    whose ``vals`` carry ``logvals``: two batched **sorted**
+    segment-logsumexps per iteration (`sparse_log_potentials`), O(cap)
+    potential-based objective per element."""
+    _, n, m = bp.shape
+    rows, cols, logvals = sketch.rows, sketch.cols, sketch.vals
+    f, g, t, err, status = sparse_log_potentials(
+        rows,
+        cols,
+        logvals,
+        sketch.csort,
+        _masked_log(bp.a),
+        _masked_log(bp.b),
+        bp.eps,
+        bp.fe,
+        n=n,
+        m=m,
+        tol=tol,
+        max_iter=max_iter,
+    )
+    eps_col = bp.eps[:, None]
+    logt = (
+        logvals
+        + jnp.take_along_axis(f, rows, axis=1) / eps_col
+        + jnp.take_along_axis(g, cols, axis=1) / eps_col
+    )
+    t_e = jnp.where(jnp.isneginf(logt) | jnp.isnan(logt), 0.0, jnp.exp(logt))
+    value = _batched_value_from_te(bp, t_e, sketch.cost_e, rows, cols, n, m)
+    return BatchedResult(
+        f, g, t, err, value, rows, cols, logvals, sketch.nnz, sketch.overflowed,
+        status,
+    )

@@ -11,13 +11,17 @@ The public surface is organized around three types plus one front end
   Sec. 2.2);
 * **solve(problem, method=..., \\*\\*opts) -> Solution** — a string-keyed
   solver registry (``available_methods()`` lists it: ``dense``, ``log``,
-  ``spar_sink_coo``, ``spar_sink_mf``, ``spar_sink_block_ell``,
-  ``spar_sink_dense``, ``rand_sink``, ``greenkhorn``, ``nys_sink``,
-  ``screenkhorn_lite``). The matrix-free ``spar_sink_mf`` runs on a
-  `PointCloudGeometry` and never materializes an (n, m) array.
-  Every solver returns a `Solution` with ``.value``, ``.potentials``,
-  ``.marginals()`` and a **lazy** ``.plan()`` that stays O(cap) for sparse
-  sketches and only densifies on explicit request.
+  ``spar_sink_coo``, ``spar_sink_log``, ``spar_sink_mf``,
+  ``spar_sink_block_ell``, ``spar_sink_dense``, ``rand_sink``,
+  ``greenkhorn``, ``nys_sink``, ``screenkhorn_lite``). The matrix-free
+  ``spar_sink_mf`` runs on a `PointCloudGeometry` and never materializes
+  an (n, m) array; ``spar_sink_log`` (and ``spar_sink_mf`` with
+  ``stabilize=True``) iterate the sketch in the log domain, so small
+  ``eps`` (paper's 1e-3 floor) cannot underflow them. Every solver
+  returns a `Solution` with ``.value``, ``.potentials``, ``.marginals()``,
+  a ``.status``/``.converged`` convergence report, and a **lazy**
+  ``.plan()`` that stays O(cap) for sparse sketches and only densifies on
+  explicit request.
 
 Migration from the legacy free functions (kept as deprecation shims):
 
@@ -59,6 +63,12 @@ from repro.core.geometry import (
     wfr_log_kernel,
 )
 from repro.core.sinkhorn import (
+    STATUS_CONVERGED,
+    STATUS_DEGENERATE,
+    STATUS_LABELS,
+    STATUS_MAX_ITER,
+    STATUS_NONFINITE,
+    STATUS_STALL,
     SinkhornResult,
     entropy,
     kl_divergence,
@@ -93,7 +103,9 @@ from repro.core.api import (
     SparsePlan,
     UOTProblem,
     available_methods,
+    build_coo_log_sketch,
     build_coo_sketch,
+    build_mf_log_sketch,
     build_mf_sketch,
     register_solver,
     solve,
@@ -106,13 +118,21 @@ __all__ = [
     "Geometry",
     "OTProblem",
     "PointCloudGeometry",
+    "STATUS_CONVERGED",
+    "STATUS_DEGENERATE",
+    "STATUS_LABELS",
+    "STATUS_MAX_ITER",
+    "STATUS_NONFINITE",
+    "STATUS_STALL",
     "SinkhornResult",
     "Solution",
     "SparSinkSolution",
     "SparsePlan",
     "UOTProblem",
     "available_methods",
+    "build_coo_log_sketch",
     "build_coo_sketch",
+    "build_mf_log_sketch",
     "build_mf_sketch",
     "default_cap",
     "default_max_blocks",

@@ -29,13 +29,17 @@ from repro.core.api.registry import (
 )
 from repro.core.api.solution import SparsePlan, Solution
 from repro.core.api.solvers import (
+    DEFAULT_TOL,
+    build_coo_log_sketch,
     build_coo_sketch,
+    build_mf_log_sketch,
     build_mf_sketch,
     mix_uniform,
     sampling_probs,
 )
 
 __all__ = [
+    "DEFAULT_TOL",
     "Geometry",
     "OTProblem",
     "PointCloudGeometry",
@@ -43,7 +47,9 @@ __all__ = [
     "SparsePlan",
     "UOTProblem",
     "available_methods",
+    "build_coo_log_sketch",
     "build_coo_sketch",
+    "build_mf_log_sketch",
     "build_mf_sketch",
     "get_solver",
     "mix_uniform",

@@ -27,7 +27,7 @@ from typing import TYPE_CHECKING, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.sinkhorn import SinkhornResult
+from repro.core.sinkhorn import STATUS_CONVERGED, STATUS_LABELS, SinkhornResult
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.api.problems import OTProblem
@@ -127,6 +127,30 @@ class Solution:
     @property
     def err(self) -> jax.Array:
         return self.result.err
+
+    # ---------------------------------------------------------- convergence
+
+    @property
+    def status(self) -> jax.Array | None:
+        """Why the iteration stopped — a ``repro.core.sinkhorn.STATUS_*``
+        code (``None`` for solvers that budget by update count instead of a
+        stopping rule, e.g. greenkhorn)."""
+        return self.result.status
+
+    @property
+    def converged(self) -> jax.Array | None:
+        """True iff the stopping rule was met (``err <= tol``). False covers
+        max_iter, stall, non-finite, and *degenerate* exits — in particular
+        a scaling-domain sketch whose values underflowed at small ``eps``
+        no longer passes silently for a converged all-zero plan."""
+        s = self.result.status
+        return None if s is None else s == STATUS_CONVERGED
+
+    @property
+    def status_label(self) -> str | None:
+        """Host-side human-readable status (syncs the device scalar)."""
+        s = self.result.status
+        return None if s is None else STATUS_LABELS[int(s)]
 
     # ------------------------------------------------------------------ plan
 

@@ -1,15 +1,22 @@
 """The built-in solver registry entries behind ``solve(problem, method=...)``.
 
-Ten methods, one `Solution` contract:
+Eleven methods, one `Solution` contract:
 
 ===================== ========================================================
 ``dense``             Algorithm 1/2 on the dense Gibbs kernel (scaling domain)
 ``log``               log-domain Algorithm 1/2 (small-``eps`` safe)
 ``spar_sink_coo``     paper Algorithms 3/4 — importance sketch, padded COO,
-                      O(s) per iteration and O(cap) plan
+                      O(s) per iteration and O(cap) plan (scaling domain:
+                      needs ``eps`` large enough that ``exp(-C/eps) > 0``)
+``spar_sink_log``     **log-domain** Algorithms 3/4 — the same importance
+                      sketch carried as ``logvals = -C_e/eps - log p*_e``,
+                      iterated by sorted-COO segment-logsumexp; safe for
+                      ``eps`` down to 1e-3 and below (paper Sec. 5 sweep)
 ``spar_sink_mf``      **matrix-free** Algorithms 3/4 on a `PointCloudGeometry`
                       — factorized O(s log n) sampler + gathered-kernel
-                      evaluation, no (n, m) array anywhere (Õ(n) end to end)
+                      evaluation, no (n, m) array anywhere (Õ(n) end to end);
+                      ``stabilize=True`` runs it in the log domain (small-eps
+                      safe, still matrix-free)
 ``spar_sink_block_ell`` tile-granular TPU sketch (DESIGN §3)
 ``spar_sink_dense``   exact eq.(7) sketch as a dense masked array (reference)
 ``rand_sink``         Spar-Sink with uniform probabilities (baseline)
@@ -21,6 +28,13 @@ Ten methods, one `Solution` contract:
 Every solver accepts both `OTProblem` and `UOTProblem`; the unbalanced
 exponent ``fe = lam/(lam+eps)`` comes from the problem object, and
 ``lam = inf`` degenerates each method to its balanced form.
+
+Every iterative method defaults to the **same** stopping tolerance
+``DEFAULT_TOL = 1e-6`` (the ``log`` method used to register ``1e-9`` while
+everything else registered ``1e-6``, so swapping methods silently changed
+the stopping rule). The scaling-domain rule is the paper's
+``||du||_1 + ||dv||_1 <= tol``; the log-domain rule is its potential
+analogue ``max|df| + max|dg| <= tol``; pass ``tol=`` to tighten either.
 
 The sketching solvers here are **the** implementation — the legacy
 ``spar_sink_ot``/``spar_sink_uot`` free functions are deprecation shims
@@ -38,6 +52,7 @@ from repro.core.api.registry import register_solver
 from repro.core.api.solution import SparsePlan, Solution
 from repro.core.baselines import greenkhorn, nys_sink, screenkhorn_lite
 from repro.core.sinkhorn import (
+    _masked_log,
     generic_scaling_loop,
     plan_from_potentials,
     plan_from_scalings,
@@ -49,13 +64,28 @@ from repro.core.sinkhorn import (
 from repro.core.spar_sink import (
     coo_objective_ot,
     coo_objective_ot_entries,
+    coo_objective_ot_log_entries,
     coo_objective_uot,
     coo_objective_uot_entries,
+    coo_objective_uot_log_entries,
     default_cap,
     default_max_blocks,
+    log_plan_entries,
 )
 
-__all__ = ["build_coo_sketch", "build_mf_sketch", "mix_uniform", "sampling_probs"]
+__all__ = [
+    "DEFAULT_TOL",
+    "build_coo_log_sketch",
+    "build_coo_sketch",
+    "build_mf_log_sketch",
+    "build_mf_sketch",
+    "mix_uniform",
+    "sampling_probs",
+]
+
+#: shared stopping-tolerance default of every registered iterative method
+#: (documented in the module table above)
+DEFAULT_TOL = 1e-6
 
 
 # --------------------------------------------------------------------------
@@ -160,6 +190,79 @@ def build_mf_sketch(
     return sparsify.sparsify_coo_mf(key, ra, rb, s, cap, entries)
 
 
+def build_coo_log_sketch(
+    problem: OTProblem,
+    key: jax.Array,
+    s: float,
+    *,
+    cap: int | None = None,
+    probs: jax.Array | None = None,
+    shrinkage: float = 0.0,
+) -> tuple[sparsify.LogSparseKernelCOO, jax.Array]:
+    """Log-space importance sketch (+ index-aligned gathered costs).
+
+    OT (and explicit ``probs`` overrides): the same eq. (7) draw as
+    `build_coo_sketch` — same uniform variates, so the sampled support is
+    bitwise identical for the same PRNG key — with values stored as
+    ``logvals = -C_e/eps - log p*_e``. UOT: the eq. (11) probabilities are
+    computed, normalized, *and drawn* in log space
+    (`sparsify.uot_sampling_logprobs`), so a sharply-concentrated
+    small-``eps`` distribution cannot flush the sampled support to zero.
+    """
+    cap = default_cap(s) if cap is None else cap
+    cost = problem.geom.cost
+    eps = float(problem.eps)
+    if probs is None and isinstance(problem, UOTProblem) and not problem.is_balanced:
+        logp = sparsify.uot_sampling_logprobs(
+            problem.a, problem.b, cost, float(problem.lam), eps
+        )
+        if shrinkage > 0.0:  # log-space mix_uniform (Thm 1 condition (ii))
+            n, m = problem.shape
+            logp = jnp.logaddexp(
+                jnp.log1p(-shrinkage) + logp,
+                jnp.log(shrinkage) - jnp.log(float(n * m)),
+            )
+        return sparsify.sparsify_coo_log(key, cost, None, eps, s, cap, logprobs=logp)
+    probs = _resolve_probs(problem, probs, shrinkage)
+    return sparsify.sparsify_coo_log(key, cost, probs, eps, s, cap)
+
+
+def build_mf_log_sketch(
+    problem: OTProblem,
+    key: jax.Array,
+    s: float,
+    *,
+    cap: int | None = None,
+) -> tuple[sparsify.LogSparseKernelCOO, jax.Array]:
+    """Matrix-free **log-space** importance sketch in O(n + s log n).
+
+    `build_mf_sketch`'s factorized Poissonized draw with entry values kept
+    as ``logvals = -C_e/eps - log rate_e`` from gathered raw costs
+    (`PointCloudGeometry.cost_entries`) — ``exp(-C/eps)`` is never
+    evaluated, so the sketch survives arbitrarily small ``eps`` and still
+    touches no (n, m) array. UOT acceptance thinning runs in log space.
+    """
+    geom = _mf_geometry(problem)
+    eps = float(problem.eps)
+    cap = default_cap(s) if cap is None else cap
+    if isinstance(problem, UOTProblem) and not problem.is_balanced:
+        lam = float(problem.lam)
+        c_ab = lam / (2.0 * lam + eps)
+        qa, qb = problem.a ** c_ab, problem.b ** c_ab
+        return sparsify.sparsify_coo_mf_log(
+            key,
+            qa / jnp.sum(qa),
+            qb / jnp.sum(qb),
+            s,
+            cap,
+            geom.cost_entries,
+            eps,
+            thin_scale=1.0 / (2.0 * lam + eps),
+        )
+    ra, rb = sparsify.ot_sampling_prob_factors(problem.a, problem.b)
+    return sparsify.sparsify_coo_mf_log(key, ra, rb, s, cap, geom.cost_entries, eps)
+
+
 def _coo_value(problem: OTProblem, sk, res) -> jax.Array:
     """O(cap) entropic objective on the sketch plan."""
     if isinstance(problem, UOTProblem) and not problem.is_balanced:
@@ -196,7 +299,9 @@ def _dense_solution(problem: OTProblem, method: str, res, Kt: jax.Array, *, nnz=
 
 
 @register_solver("dense")
-def _solve_dense(problem: OTProblem, *, tol: float = 1e-6, max_iter: int = 1000) -> Solution:
+def _solve_dense(
+    problem: OTProblem, *, tol: float = DEFAULT_TOL, max_iter: int = 1000
+) -> Solution:
     """Scaling-domain Sinkhorn on the dense Gibbs kernel (Alg. 1 / Alg. 2)."""
     K = problem.kernel()
     if problem.fe == 1.0:
@@ -209,7 +314,9 @@ def _solve_dense(problem: OTProblem, *, tol: float = 1e-6, max_iter: int = 1000)
 
 
 @register_solver("log")
-def _solve_log(problem: OTProblem, *, tol: float = 1e-9, max_iter: int = 1000) -> Solution:
+def _solve_log(
+    problem: OTProblem, *, tol: float = DEFAULT_TOL, max_iter: int = 1000
+) -> Solution:
     """Log-domain Sinkhorn on dual potentials (survives ``eps`` down to 1e-3)."""
     logK = problem.log_kernel()
     eps = float(problem.eps)
@@ -246,10 +353,16 @@ def _solve_spar_sink_coo(
     cap: int | None = None,
     shrinkage: float = 0.0,
     probs: jax.Array | None = None,
-    tol: float = 1e-6,
+    tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
 ) -> Solution:
-    """Spar-Sink on the padded-COO sketch: O(s) iterations, O(cap) plan."""
+    """Spar-Sink on the padded-COO sketch: O(s) iterations, O(cap) plan.
+
+    **Scaling domain**: needs ``eps`` large enough that ``exp(-C/eps)``
+    stays representable — at the paper's small-``eps`` floor the sketch
+    underflows and the solve reports ``STATUS_DEGENERATE``; use
+    ``spar_sink_log`` there.
+    """
     sk = build_coo_sketch(problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage)
     res = _coo_scaling_loop(problem, sk, tol, max_iter)
     return _coo_solution(
@@ -288,6 +401,103 @@ def _coo_solution(method: str, problem: OTProblem, sk, res, value) -> Solution:
     )
 
 
+def _sparse_log_loop(problem: OTProblem, sk, tol: float, max_iter: int):
+    """Run the sorted-COO segment-logsumexp iteration on a log-space sketch.
+
+    Dispatches to `repro.batch.solvers.sparse_log_potentials` at B = 1 —
+    the same compiled kernel the batched executor runs — so batched
+    ``spar_sink_log`` results are **bitwise** the per-problem ones (two
+    differently-shaped XLA programs may legally differ by a ulp in the
+    fused exp/log of the logsumexp; one shared B-invariant program cannot).
+    `repro.core.sinkhorn.generic_sparse_log_loop` remains the generic
+    closure-based reference of the same iteration.
+    """
+    from repro.batch.solvers import sparse_log_potentials  # local: avoids cycle
+    from repro.core.sinkhorn import SinkhornResult
+
+    eps = float(problem.eps)
+    n, m = problem.shape
+    csort = sk.csort[None] if sk.csort is not None else None
+    f, g, t, err, status = sparse_log_potentials(
+        sk.rows[None],
+        sk.cols[None],
+        sk.logvals[None],
+        csort,
+        _masked_log(problem.a)[None],
+        _masked_log(problem.b)[None],
+        jnp.asarray([eps], problem.a.dtype),
+        jnp.asarray([problem.fe], problem.a.dtype),
+        n=n,
+        m=m,
+        tol=tol,
+        max_iter=max_iter,
+    )
+    return SinkhornResult(f[0], g[0], t[0], err[0], status[0])
+
+
+def _coo_log_value(problem: OTProblem, sk, c_e, res) -> jax.Array:
+    """O(cap) entropic objective of a log-domain sparse solve, evaluated
+    from potentials and gathered costs."""
+    if isinstance(problem, UOTProblem) and not problem.is_balanced:
+        return coo_objective_uot_log_entries(
+            sk, c_e, res, problem.a, problem.b, float(problem.lam), problem.eps
+        )
+    return coo_objective_ot_log_entries(sk, c_e, res, problem.eps)
+
+
+def _coo_log_solution(method: str, problem: OTProblem, sk, res, value) -> Solution:
+    eps = float(problem.eps)
+
+    def sparse_plan() -> SparsePlan:
+        # t_e = exp((f_i + g_j - C_e)/eps - log p*_e); padded slots exact 0
+        return SparsePlan(
+            sk.rows, sk.cols, log_plan_entries(sk, res, eps), sk.nnz, sk.n, sk.m
+        )
+
+    return Solution(
+        method=method,
+        problem=problem,
+        value=value,
+        result=res,
+        domain="log",
+        nnz=sk.nnz,
+        overflowed=sk.overflowed,
+        _plan_thunk=sparse_plan,
+    )
+
+
+@register_solver("spar_sink_log")
+def _solve_spar_sink_log(
+    problem: OTProblem,
+    *,
+    key: jax.Array,
+    s: float,
+    cap: int | None = None,
+    shrinkage: float = 0.0,
+    probs: jax.Array | None = None,
+    tol: float = DEFAULT_TOL,
+    max_iter: int = 1000,
+) -> Solution:
+    """**Log-domain** Spar-Sink (paper Alg. 3/4), safe for small ``eps``.
+
+    Same importance sketch as ``spar_sink_coo`` (bitwise-identical sampled
+    support for the same PRNG key on OT problems), but the sketch carries
+    ``logvals = -C_e/eps - log p*_e`` and the iteration runs sorted-COO
+    segment-logsumexp on dual potentials — nothing ever evaluates
+    ``exp(-C/eps)``, so ``eps`` down to 1e-3 and below (the paper's Sec. 5
+    sweep) cannot underflow the solve the way the scaling-domain sketch
+    does. Returns a ``domain="log"`` `Solution`; plan and objective are
+    evaluated from the potentials.
+    """
+    sk, c_e = build_coo_log_sketch(
+        problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage
+    )
+    res = _sparse_log_loop(problem, sk, tol, max_iter)
+    return _coo_log_solution(
+        "spar_sink_log", problem, sk, res, _coo_log_value(problem, sk, c_e, res)
+    )
+
+
 @register_solver("spar_sink_mf")
 def _solve_spar_sink_mf(
     problem: OTProblem,
@@ -297,7 +507,8 @@ def _solve_spar_sink_mf(
     cap: int | None = None,
     impl: str = "auto",
     shared_variates: bool = False,
-    tol: float = 1e-6,
+    stabilize: bool = False,
+    tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
 ) -> Solution:
     """Matrix-free Spar-Sink: Õ(n) end to end, no (n, m) array anywhere.
@@ -307,14 +518,34 @@ def _solve_spar_sink_mf(
     sorted-COO segment-sums, and the objective uses gathered costs — so
     memory stays O(n + s) and n >= 2^17 fits on a laptop.
 
+    ``stabilize=True`` runs the whole pipeline in the **log domain**
+    (`build_mf_log_sketch` + segment-logsumexp on potentials): still
+    matrix-free, but safe for small ``eps`` where the default
+    scaling-domain sketch underflows ``exp(-C/eps)`` to an all-zero (and
+    now loudly ``degenerate``-flagged) solve. Returns a ``domain="log"``
+    `Solution` in that mode. ``impl`` only affects the scaling-domain
+    path: the stabilized sketch gathers raw costs (there is no kernel
+    exponential to fuse), so the Pallas gathered-kernel backend does not
+    apply to it.
+
     ``shared_variates=True`` is the small-n **test mode**: it draws the
     exact Bernoulli bits of the dense-sketch ``spar_sink_coo`` path (which
     materializes O(n m), hence only below the geometry's ``dense_guard``),
     making scalings bitwise-identical to ``spar_sink_coo`` for the same
     PRNG key; only the objective differs (gathered vs dense-indexed costs,
-    equal up to rounding).
+    equal up to rounding). Combined with ``stabilize=True`` it draws the
+    ``spar_sink_log`` support instead.
     """
     geom = _mf_geometry(problem)
+    if stabilize:
+        if shared_variates:
+            sk, c_e = build_coo_log_sketch(problem, key, s, cap=cap)
+        else:
+            sk, c_e = build_mf_log_sketch(problem, key, s, cap=cap)
+        res = _sparse_log_loop(problem, sk, tol, max_iter)
+        return _coo_log_solution(
+            "spar_sink_mf", problem, sk, res, _coo_log_value(problem, sk, c_e, res)
+        )
     if shared_variates:
         sk = build_coo_sketch(problem, key, s, cap=cap)  # guarded dense draw
         c_e = geom.cost_entries(sk.rows, sk.cols)
@@ -337,7 +568,7 @@ def _solve_rand_sink(
     key: jax.Array,
     s: float,
     cap: int | None = None,
-    tol: float = 1e-6,
+    tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
 ) -> Solution:
     """Spar-Sink with uniform probabilities (the paper's Rand-Sink baseline).
@@ -367,10 +598,11 @@ def _solve_spar_sink_dense(
     s: float,
     shrinkage: float = 0.0,
     probs: jax.Array | None = None,
-    tol: float = 1e-6,
+    tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
 ) -> Solution:
-    """Exact eq.(7) sketch held as a dense masked array (O(n^2) reference)."""
+    """Exact eq.(7) sketch held as a dense masked array (O(n^2) reference;
+    scaling domain — same small-``eps`` caveat as ``spar_sink_coo``)."""
     K = problem.kernel()
     probs = _resolve_probs(problem, probs, shrinkage)
     Kt = sparsify.sparsify_dense(key, K, probs, s)
@@ -396,10 +628,11 @@ def _solve_spar_sink_block_ell(
     max_blocks: int | None = None,
     shrinkage: float = 0.0,
     probs: jax.Array | None = None,
-    tol: float = 1e-6,
+    tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
 ) -> Solution:
-    """Tile-granular sketch in block-ELL layout (dense MXU work per tile)."""
+    """Tile-granular sketch in block-ELL layout (dense MXU work per tile;
+    scaling domain — same small-``eps`` caveat as ``spar_sink_coo``)."""
     K = problem.kernel()
     probs = _resolve_probs(problem, probs, shrinkage)
     tile_p = sparsify.tile_probs_from_elem(probs, block)
@@ -462,7 +695,7 @@ def _solve_nys_sink(
     *,
     key: jax.Array,
     rank: int | None = None,
-    tol: float = 1e-6,
+    tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
 ) -> Solution:
     """Nyström low-rank kernel + Sinkhorn. Needs near-PSD K (fails on WFR)."""
@@ -500,7 +733,7 @@ def _solve_screenkhorn_lite(
     problem: OTProblem,
     *,
     decimation: int = 3,
-    tol: float = 1e-6,
+    tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
 ) -> Solution:
     """Static active-set screening; screened-out atoms keep zero scalings."""

@@ -191,4 +191,7 @@ def screenkhorn_lite(
     )
     u = jnp.zeros((n,), a.dtype).at[rows].set(res.u)
     v = jnp.zeros((m,), b.dtype).at[cols].set(res.v)
-    return SinkhornResult(u, v, res.n_iter, res.err), rows, cols
+    # scatter back to full size; the restricted solve's convergence status
+    # carries over (screened-out atoms are zero by construction, and the
+    # degenerate check on the restricted scalings is the meaningful one)
+    return SinkhornResult(u, v, res.n_iter, res.err, res.status), rows, cols

@@ -23,20 +23,58 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "STATUS_CONVERGED",
+    "STATUS_DEGENERATE",
+    "STATUS_LABELS",
+    "STATUS_MAX_ITER",
+    "STATUS_NONFINITE",
+    "STATUS_STALL",
     "SinkhornResult",
-    "sinkhorn",
-    "sinkhorn_uot",
-    "sinkhorn_log",
-    "sinkhorn_uot_log",
-    "generic_scaling_loop",
-    "generic_log_loop",
-    "plan_from_scalings",
-    "plan_from_potentials",
     "entropy",
+    "generic_log_loop",
+    "generic_scaling_loop",
+    "generic_sparse_log_loop",
     "kl_divergence",
     "ot_cost_from_plan",
+    "plan_from_potentials",
+    "plan_from_scalings",
+    "sinkhorn",
+    "sinkhorn_log",
+    "sinkhorn_uot",
+    "sinkhorn_uot_log",
     "uot_cost_from_plan",
 ]
+
+
+# Convergence status codes (`SinkhornResult.status` / `Solution.status`).
+# Every iteration loop reports *why* it stopped, so a degenerate solve (e.g.
+# a scaling-domain sketch whose values underflowed at small eps) can no
+# longer masquerade as a converged one.
+STATUS_CONVERGED = 0  # stopping rule met (err <= tol)
+STATUS_MAX_ITER = 1  # iteration budget exhausted before err <= tol
+STATUS_STALL = 2  # stall detection fired (scaling loops; see below)
+STATUS_NONFINITE = 3  # err or scalings/potentials went NaN / +inf
+STATUS_DEGENERATE = 4  # all-zero scalings / all -inf potentials: empty plan
+
+STATUS_LABELS = ("converged", "max_iter", "stall", "non_finite", "degenerate")
+
+
+def _status_code(bad, degenerate, err, tol, stalled) -> jax.Array:
+    """The one STATUS_* decision tree (scalar or batched (B,) masks):
+    non-finite > degenerate > tol-met > stall > max_iter."""
+    return jnp.where(
+        bad,
+        STATUS_NONFINITE,
+        jnp.where(
+            degenerate,
+            STATUS_DEGENERATE,
+            jnp.where(
+                err <= tol,
+                STATUS_CONVERGED,
+                jnp.where(stalled, STATUS_STALL, STATUS_MAX_ITER),
+            ),
+        ),
+    ).astype(jnp.int32)
 
 
 class SinkhornResult(NamedTuple):
@@ -46,6 +84,14 @@ class SinkhornResult(NamedTuple):
     v: jax.Array
     n_iter: jax.Array
     err: jax.Array
+    #: why the loop stopped — one of the ``STATUS_*`` codes; ``None`` on
+    #: hand-built results (e.g. baselines that budget by update count)
+    status: jax.Array | None = None
+
+    @property
+    def converged(self) -> jax.Array | None:
+        """True iff the stopping rule was met (``None`` when unknown)."""
+        return None if self.status is None else self.status == STATUS_CONVERGED
 
 
 def _l1(x: jax.Array) -> jax.Array:
@@ -56,6 +102,11 @@ def _safe_div(num: jax.Array, den: jax.Array) -> jax.Array:
     """``num/den`` with the convention 0 where ``den == 0`` (empty kernel rows:
     no admissible transport from that atom — its scaling stays inert)."""
     return jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+
+
+def _masked_log(x: jax.Array) -> jax.Array:
+    """``log x`` with ``-inf`` at ``x <= 0`` (dead atoms), jit-safe."""
+    return jnp.log(jnp.where(x > 0, x, 1.0)) + jnp.where(x > 0, 0.0, -jnp.inf)
 
 
 def generic_scaling_loop(
@@ -78,15 +129,25 @@ def generic_scaling_loop(
     sub-marginal (possible at small s), the plan converges while the
     scalings diverge, and stall detection returns the converged plan instead
     of looping to max_iter. Marginal-violation error is the stall metric.
+
+    The returned ``status`` says why the loop stopped. In particular a NaN
+    ``err`` (which makes ``err > tol`` False, exiting immediately) and
+    all-zero scalings (a sketch whose values underflowed: ``_safe_div``
+    silently zeroes every update) are surfaced as ``STATUS_NONFINITE`` /
+    ``STATUS_DEGENERATE`` instead of passing for convergence.
     """
     n, m = a.shape[0], b.shape[0]
     u0 = jnp.ones((n,), dtype=a.dtype)
     v0 = jnp.ones((m,), dtype=b.dtype)
-    big = jnp.array(jnp.inf, a.dtype)
+    # finite "huge" sentinel: keeps the first cond() check truthy while
+    # letting isfinite(err) distinguish a genuinely diverged (+inf) error
+    big = jnp.array(jnp.finfo(a.dtype).max, a.dtype)
 
     def cond(state):
         _, _, t, err, _, since = state
-        return (err > tol) & (t < max_iter) & (since < patience)
+        return (
+            (err > tol) & jnp.isfinite(err) & (t < max_iter) & (since < patience)
+        )
 
     def body(state):
         u, v, t, _, best, since = state
@@ -102,12 +163,18 @@ def generic_scaling_loop(
         since = jnp.where(improved, 0, since + 1)
         return u_new, v_new, t + 1, err, best, since
 
-    u, v, t, err, _, _ = jax.lax.while_loop(
+    u, v, t, err, _, since = jax.lax.while_loop(
         cond,
         body,
         (u0, v0, jnp.array(0, jnp.int32), big, big, jnp.array(0, jnp.int32)),
     )
-    return SinkhornResult(u, v, t, err)
+    bad = ~(
+        jnp.isfinite(err) & jnp.all(jnp.isfinite(u)) & jnp.all(jnp.isfinite(v))
+    )
+    degenerate = (jnp.max(u) <= 0.0) | (jnp.max(v) <= 0.0)  # scalings are >= 0
+    return SinkhornResult(
+        u, v, t, err, _status_code(bad, degenerate, err, tol, since >= patience)
+    )
 
 
 def generic_log_loop(
@@ -152,7 +219,108 @@ def generic_log_loop(
     f, g, t, err = jax.lax.while_loop(
         cond, body, (f0, g0, jnp.array(0, jnp.int32), jnp.array(jnp.inf, loga.dtype))
     )
-    return SinkhornResult(f, g, t, err)
+    return SinkhornResult(f, g, t, err, _log_domain_status(f, g, err, tol))
+
+
+def _log_domain_status(
+    f: jax.Array,
+    g: jax.Array,
+    err: jax.Array,
+    tol,
+    stalled: jax.Array | bool = False,
+) -> jax.Array:
+    """Post-loop status for potential-domain loops: ``-inf`` potentials are
+    legitimate (dead atoms), NaN / ``+inf`` ones are not; *all* ``-inf`` on
+    a side means no transportable mass at all (degenerate)."""
+    bad = (
+        jnp.isnan(err)
+        | jnp.any(jnp.isnan(f) | (f == jnp.inf))
+        | jnp.any(jnp.isnan(g) | (g == jnp.inf))
+    )
+    degenerate = jnp.all(jnp.isneginf(f)) | jnp.all(jnp.isneginf(g))
+    return _status_code(bad, degenerate, err, tol, stalled)
+
+
+def generic_sparse_log_loop(
+    lse_row: Callable[[jax.Array], jax.Array],
+    lse_col: Callable[[jax.Array], jax.Array],
+    loga: jax.Array,
+    logb: jax.Array,
+    eps: float,
+    fe: float | jax.Array = 1.0,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+    patience: int = 100,
+) -> SinkhornResult:
+    """Log-domain Sinkhorn on a *sparse* (sketched) kernel.
+
+    Same potential update and stopping rule as `generic_log_loop`, with two
+    extra conventions for randomly-sparsified kernels:
+
+    * a sparse segment-logsumexp legitimately returns ``-inf`` for an atom
+      none of whose sampled entries is alive (no sketch entry in that row,
+      or every sampled neighbor dead). Such atoms are pinned to
+      ``f = -inf`` — the log-domain image of the scaling loop's
+      ``_safe_div`` zeros — rather than the ``+inf`` the raw update would
+      produce, so the iteration stays finite;
+    * `generic_scaling_loop`'s stall detection: when the sketch's bipartite
+      graph pinches a sub-marginal (possible at small s), the plan
+      converges while the potentials drift forever — if the column-marginal
+      violation hasn't improved by a relative 1e-4 for ``patience``
+      iterations, stop and report ``STATUS_STALL``.
+    """
+    n, m = loga.shape[0], logb.shape[0]
+    neg_inf_a = jnp.isneginf(loga)
+    neg_inf_b = jnp.isneginf(logb)
+    # dead atoms start pinned (not at 0): their first-iteration 0 -> -inf
+    # jump would otherwise register as an infinite err, and — in the batched
+    # mirror of this loop — make inert bucket padding visible in the
+    # stopping rule, breaking bitwise parity with the per-problem solve
+    f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.zeros((n,), loga.dtype))
+    g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.zeros((m,), logb.dtype))
+    big = jnp.array(jnp.finfo(loga.dtype).max, loga.dtype)
+    b_lin = jnp.exp(logb)  # loop-invariant (matches the batched mirror)
+
+    def cond(state):
+        _, _, t, err, _, since = state
+        return (err > tol) & (t < max_iter) & (since < patience)
+
+    def body(state):
+        f, g, t, _, best, since = state
+        lr = lse_row(g)
+        f_new = fe * eps * (loga - lr)
+        f_new = jnp.where(neg_inf_a | jnp.isneginf(lr), -jnp.inf, f_new)
+        lc = lse_col(f_new)
+        g_new = fe * eps * (logb - lc)
+        g_new = jnp.where(neg_inf_b | jnp.isneginf(lc), -jnp.inf, g_new)
+        df = jnp.where(
+            jnp.isneginf(f_new) & jnp.isneginf(f), 0.0, jnp.abs(f_new - f)
+        )
+        dg = jnp.where(
+            jnp.isneginf(g_new) & jnp.isneginf(g), 0.0, jnp.abs(g_new - g)
+        )
+        err = jnp.max(df) + jnp.max(dg)
+        # stall metric (free): column marginal of the pre-update plan is
+        # exp(g/eps + lse_col(f_new)) — the log-domain mirror of the
+        # scaling loop's `v * K^T u_new`
+        col_marg = jnp.where(
+            jnp.isneginf(g) | jnp.isneginf(lc), 0.0, jnp.exp(g / eps + lc)
+        )
+        marg = jnp.sum(jnp.abs(col_marg - b_lin))
+        improved = marg < best * (1.0 - 1e-4)
+        best = jnp.minimum(best, marg)
+        since = jnp.where(improved, 0, since + 1)
+        return f_new, g_new, t + 1, err, best, since
+
+    f, g, t, err, _, since = jax.lax.while_loop(
+        cond,
+        body,
+        (f0, g0, jnp.array(0, jnp.int32), big, big, jnp.array(0, jnp.int32)),
+    )
+    return SinkhornResult(
+        f, g, t, err, _log_domain_status(f, g, err, tol, since >= patience)
+    )
 
 
 # --------------------------------------------------------------------------
@@ -213,8 +381,7 @@ def sinkhorn_log(
     max_iter: int = 1000,
 ) -> SinkhornResult:
     """Log-domain Algorithm 1; returns potentials ``(f, g)``."""
-    loga = jnp.log(jnp.where(a > 0, a, 1.0)) + jnp.where(a > 0, 0.0, -jnp.inf)
-    logb = jnp.log(jnp.where(b > 0, b, 1.0)) + jnp.where(b > 0, 0.0, -jnp.inf)
+    loga, logb = _masked_log(a), _masked_log(b)
     return generic_log_loop(
         _dense_lse_row(logK, eps),
         _dense_lse_col(logK, eps),
@@ -240,8 +407,7 @@ def sinkhorn_uot_log(
 ) -> SinkhornResult:
     """Log-domain Algorithm 2; returns potentials ``(f, g)``."""
     fe = lam / (lam + eps)
-    loga = jnp.log(jnp.where(a > 0, a, 1.0)) + jnp.where(a > 0, 0.0, -jnp.inf)
-    logb = jnp.log(jnp.where(b > 0, b, 1.0)) + jnp.where(b > 0, 0.0, -jnp.inf)
+    loga, logb = _masked_log(a), _masked_log(b)
     return generic_log_loop(
         _dense_lse_row(logK, eps),
         _dense_lse_col(logK, eps),

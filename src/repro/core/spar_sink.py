@@ -8,7 +8,8 @@ This module keeps:
 * the paper-level sizing helpers ``s0`` / ``default_cap`` /
   ``default_max_blocks`` (shared by the registry and the benchmarks);
 * the O(s) sparse objective evaluators ``coo_objective_ot`` /
-  ``coo_objective_uot``;
+  ``coo_objective_uot`` (+ the ``*_log_entries`` potential-based variants
+  and `log_plan_entries` for the log-domain sketch solvers);
 * ``spar_sink_ot`` / ``spar_sink_uot`` as **deprecated** thin wrappers over
   ``solve()`` — same signature, same ``SparSinkSolution`` return, bitwise
   identical results for a given PRNG key.
@@ -26,16 +27,19 @@ from repro.core import sparsify
 from repro.core.sinkhorn import SinkhornResult, kl_divergence
 
 __all__ = [
-    "s0",
-    "default_cap",
-    "default_max_blocks",
     "SparSinkSolution",
-    "spar_sink_ot",
-    "spar_sink_uot",
     "coo_objective_ot",
     "coo_objective_ot_entries",
+    "coo_objective_ot_log_entries",
     "coo_objective_uot",
     "coo_objective_uot_entries",
+    "coo_objective_uot_log_entries",
+    "default_cap",
+    "default_max_blocks",
+    "log_plan_entries",
+    "s0",
+    "spar_sink_ot",
+    "spar_sink_uot",
 ]
 
 Method = Literal["dense", "coo", "block_ell"]
@@ -87,6 +91,25 @@ def _elem_entropy(t: jax.Array) -> jax.Array:
     return -jnp.where(t > 0, t * (logt - 1.0), 0.0)
 
 
+def _objective_ot_from_te(t_e: jax.Array, c_e: jax.Array, eps: float) -> jax.Array:
+    tc = jnp.sum(jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0))
+    ent = jnp.sum(_elem_entropy(t_e))
+    return tc - eps * ent
+
+
+def log_plan_entries(
+    sk: sparsify.LogSparseKernelCOO, res: SinkhornResult, eps: float
+) -> jax.Array:
+    """Plan entries of a log-domain sparse solve, evaluated from potentials:
+    ``t_e = exp((f_i + g_j - C_e)/eps - log p*_e)`` — the three exponents are
+    summed in log space first, so the entries are finite wherever the plan
+    is, even when each factor under/overflows on its own. Dead atoms
+    (``f/g = -inf``) and padded slots (``logvals = -inf``) come out exactly 0.
+    """
+    logt = sk.logvals + res.u[sk.rows] / eps + res.v[sk.cols] / eps
+    return jnp.where(jnp.isneginf(logt) | jnp.isnan(logt), 0.0, jnp.exp(logt))
+
+
 def coo_objective_ot_entries(
     sk: sparsify.SparseKernelCOO, c_e: jax.Array, res: SinkhornResult, eps: float
 ) -> jax.Array:
@@ -94,9 +117,17 @@ def coo_objective_ot_entries(
     — the matrix-free path hands in costs evaluated entry-wise from support
     points, so no dense C is ever indexed."""
     t_e = res.u[sk.rows] * sk.vals * res.v[sk.cols]
-    tc = jnp.sum(jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0))
-    ent = jnp.sum(_elem_entropy(t_e))
-    return tc - eps * ent
+    return _objective_ot_from_te(t_e, c_e, eps)
+
+
+def coo_objective_ot_log_entries(
+    sk: sparsify.LogSparseKernelCOO,
+    c_e: jax.Array,
+    res: SinkhornResult,
+    eps: float,
+) -> jax.Array:
+    """OT objective of a log-domain sparse solve (potentials in ``res``)."""
+    return _objective_ot_from_te(log_plan_entries(sk, res, eps), c_e, eps)
 
 
 def coo_objective_ot(
@@ -104,6 +135,25 @@ def coo_objective_ot(
 ) -> jax.Array:
     """``<T~,C> - eps H(T~)`` touching only the s kept entries."""
     return coo_objective_ot_entries(sk, C[sk.rows, sk.cols], res, eps)
+
+
+def _objective_uot_from_te(
+    t_e: jax.Array,
+    c_e: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    n: int,
+    m: int,
+    a: jax.Array,
+    b: jax.Array,
+    lam: float,
+    eps: float,
+) -> jax.Array:
+    tc = jnp.sum(jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0))
+    ent = jnp.sum(_elem_entropy(t_e))
+    row = jax.ops.segment_sum(t_e, rows, num_segments=n)
+    col = jax.ops.segment_sum(t_e, cols, num_segments=m)
+    return tc + lam * kl_divergence(row, a) + lam * kl_divergence(col, b) - eps * ent
 
 
 def coo_objective_uot_entries(
@@ -118,11 +168,25 @@ def coo_objective_uot_entries(
     """Eq. (10) objective on the sparse plan from gathered costs (see
     `coo_objective_ot_entries`)."""
     t_e = res.u[sk.rows] * sk.vals * res.v[sk.cols]
-    tc = jnp.sum(jnp.where(t_e > 0, t_e * jnp.where(jnp.isinf(c_e), 0.0, c_e), 0.0))
-    ent = jnp.sum(_elem_entropy(t_e))
-    row = jax.ops.segment_sum(t_e, sk.rows, num_segments=sk.n)
-    col = jax.ops.segment_sum(t_e, sk.cols, num_segments=sk.m)
-    return tc + lam * kl_divergence(row, a) + lam * kl_divergence(col, b) - eps * ent
+    return _objective_uot_from_te(
+        t_e, c_e, sk.rows, sk.cols, sk.n, sk.m, a, b, lam, eps
+    )
+
+
+def coo_objective_uot_log_entries(
+    sk: sparsify.LogSparseKernelCOO,
+    c_e: jax.Array,
+    res: SinkhornResult,
+    a: jax.Array,
+    b: jax.Array,
+    lam: float,
+    eps: float,
+) -> jax.Array:
+    """Eq. (10) objective of a log-domain sparse solve (potentials in ``res``)."""
+    t_e = log_plan_entries(sk, res, eps)
+    return _objective_uot_from_te(
+        t_e, c_e, sk.rows, sk.cols, sk.n, sk.m, a, b, lam, eps
+    )
 
 
 def coo_objective_uot(

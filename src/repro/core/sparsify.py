@@ -25,6 +25,15 @@ Sampling probabilities:
 * OT  (eq. 9):  p_ij ∝ sqrt(a_i b_j)                       — factorizes, O(n)
 * UOT (eq. 11): p_ij ∝ (a_i b_j)^{λ/(2λ+ε)} K_ij^{ε/(2λ+ε)} — computed in log space
 * uniform                                                    — Rand-Sink baseline
+
+Small ``eps`` (the paper sweeps down to 1e-3) underflows every *value*
+above: ``K = exp(-C/eps)`` flushes to exact zeros, so a scaling-domain
+sketch degenerates before the solver runs. The **log-space sketches**
+(`LogSparseKernelCOO` via `sparsify_coo_log` / `sparsify_coo_mf_log`)
+carry ``logvals = -C_e/eps - log p*_e`` instead — built from gathered raw
+costs, never exponentiating — and iterate through segment-logsumexp
+(`coo_lse_row` / `coo_lse_col`), which is what ``spar_sink_log`` and
+``spar_sink_mf(stabilize=True)`` run on.
 """
 from __future__ import annotations
 
@@ -35,25 +44,32 @@ import jax
 import jax.numpy as jnp
 
 __all__ = [
-    "ot_sampling_probs",
-    "ot_sampling_prob_factors",
-    "uot_sampling_probs",
-    "uniform_probs",
-    "uniform_prob_factors",
-    "poisson_keep_probs",
-    "sparsify_dense",
-    "SparseKernelCOO",
-    "sparsify_coo",
-    "sparsify_coo_mf",
-    "coo_matvec",
-    "coo_rmatvec",
     "BlockEllKernel",
-    "ot_tile_probs",
-    "tile_probs_from_elem",
-    "sparsify_block_ell",
+    "LogSparseKernelCOO",
+    "SparseKernelCOO",
     "block_ell_matvec",
     "block_ell_rmatvec",
     "block_ell_to_dense",
+    "coo_lse_col",
+    "coo_lse_row",
+    "coo_matvec",
+    "coo_rmatvec",
+    "ot_sampling_prob_factors",
+    "ot_sampling_probs",
+    "ot_tile_probs",
+    "poisson_keep_probs",
+    "segment_logsumexp",
+    "sparsify_block_ell",
+    "sparsify_coo",
+    "sparsify_coo_log",
+    "sparsify_coo_mf",
+    "sparsify_coo_mf_log",
+    "sparsify_dense",
+    "tile_probs_from_elem",
+    "uniform_prob_factors",
+    "uniform_probs",
+    "uot_sampling_logprobs",
+    "uot_sampling_probs",
 ]
 
 
@@ -89,6 +105,26 @@ def uot_sampling_probs(
     logz = jax.scipy.special.logsumexp(jnp.where(jnp.isneginf(logp), -jnp.inf, logp))
     p = jnp.exp(logp - logz)
     return jnp.where(jnp.isneginf(logp), 0.0, p)
+
+
+def uot_sampling_logprobs(
+    a: jax.Array, b: jax.Array, cost: jax.Array, lam: float, eps: float
+) -> jax.Array:
+    """Eq. (11) as *normalized log-probabilities*, entirely in log space.
+
+    Works from the raw cost (``+inf`` = blocked): the kernel factor
+    ``K_ij^{eps/(2lam+eps)} = exp(-C_ij/(2lam+eps))`` is kept as the single
+    exponent ``-C/(2lam+eps)`` instead of being exponentiated and
+    re-powered, so small ``eps`` (or small ``lam``) never flushes a
+    probability to an exact zero before the solver even samples. Consumed
+    by the log-domain sketch builders; `uot_sampling_probs` is its
+    ``exp``."""
+    from repro.core.sinkhorn import _masked_log
+
+    c_ab = lam / (2.0 * lam + eps)
+    logk_part = jnp.where(jnp.isinf(cost), -jnp.inf, -cost / (2.0 * lam + eps))
+    logp = c_ab * (_masked_log(a)[:, None] + _masked_log(b)[None, :]) + logk_part
+    return logp - jax.scipy.special.logsumexp(logp)
 
 
 def uniform_probs(n: int, m: int, dtype=jnp.float32) -> jax.Array:
@@ -192,6 +228,81 @@ def sparsify_coo(
     )
 
 
+class LogSparseKernelCOO(NamedTuple):
+    """Log-space padded COO sketch: `SparseKernelCOO`'s layout, but carrying
+    ``logvals = -C_e/eps - log p*_e`` (= ``log(K_e/p*_e)``) so the sketch
+    stays finite when ``exp(-C/eps)`` underflows (eps down to 1e-3 and
+    below). Padded slots carry ``logvals == -inf`` and park at row n-1."""
+
+    rows: jax.Array  # (cap,) int32, ascending; padding parks at n-1
+    cols: jax.Array  # (cap,) int32
+    logvals: jax.Array  # (cap,)   padded with -inf
+    nnz: jax.Array  # () int32 realized count (truncated to cap on overflow)
+    n: int
+    m: int
+    csort: jax.Array | None = None  # (cap,) int32 col-sorted permutation
+    overflowed: jax.Array | None = None  # () bool — realized nnz exceeded cap
+
+    @property
+    def cap(self) -> int:
+        return self.rows.shape[0]
+
+
+def sparsify_coo_log(
+    key: jax.Array,
+    cost: jax.Array,
+    probs,
+    eps: float,
+    s: float,
+    cap: int,
+    *,
+    logprobs: jax.Array | None = None,
+) -> tuple[LogSparseKernelCOO, jax.Array]:
+    """Log-space padded COO sketch built from the raw *cost* matrix.
+
+    Same eq. (7) draw as `sparsify_coo` — with linear ``probs`` the keep
+    mask is drawn from the same uniform variates, so the sampled support is
+    bitwise the `sparsify_coo` support for the same PRNG key — but entry
+    values are stored as ``logvals = -C_e/eps - log p*_e`` without ever
+    materializing ``exp(-C/eps)``. With ``logprobs`` (normalized log-space
+    probabilities, e.g. `uot_sampling_logprobs`) the keep probabilities
+    ``log p* = min(0, log s + log p)`` and the inclusion draw
+    ``log U < log p*`` also stay in log space, so a sharply-concentrated
+    eq. (11) distribution cannot flush its support to zero first.
+
+    Returns ``(sketch, C_e)`` — gathered raw costs, index-aligned with the
+    sketch (``+inf`` on padded slots), for potential-based objectives.
+    """
+    n, m = cost.shape
+    if logprobs is None:
+        p_star = poisson_keep_probs(probs, s)
+        keep = _keep_mask(key, p_star)
+        log_pstar = jnp.log(jnp.maximum(p_star, 1e-300))
+    else:
+        log_pstar = jnp.minimum(0.0, jnp.log(s) + logprobs)
+        u = jax.random.uniform(key, log_pstar.shape, dtype=log_pstar.dtype)
+        keep = jnp.log(u) < log_pstar
+    true_nnz = jnp.sum(keep).astype(jnp.int32)
+    # same padding convention as sparsify_coo: park at the last flat index
+    flat_idx = jnp.nonzero(keep.ravel(), size=cap, fill_value=n * m - 1)[0]
+    valid = jnp.arange(cap) < true_nnz
+    c_e = jnp.where(valid, cost.ravel()[flat_idx], jnp.inf)
+    logvals = jnp.where(valid, -c_e / eps - log_pstar.ravel()[flat_idx], -jnp.inf)
+    rows = (flat_idx // m).astype(jnp.int32)
+    cols = (flat_idx % m).astype(jnp.int32)
+    sk = LogSparseKernelCOO(
+        rows,
+        cols,
+        logvals,
+        jnp.minimum(true_nnz, cap),
+        n,
+        m,
+        csort=jnp.argsort(cols).astype(jnp.int32),
+        overflowed=true_nnz > cap,
+    )
+    return sk, c_e
+
+
 def sparsify_coo_mf(
     key: jax.Array,
     ra: jax.Array,
@@ -243,10 +354,23 @@ def sparsify_coo_mf(
     k_e, c_e = entries_fn(rows, cols)
     rate = s * ra[rows] * rb[cols]  # E[multiplicity] per drawn entry
     if thin_scale is not None:
-        acc = jnp.exp(-c_e * thin_scale)  # K^{eps/(2lam+eps)}; blocked -> 0
-        valid = valid & (jax.random.uniform(k_acc, (cap,), dtype=rb.dtype) < acc)
-        rate = rate * acc
-    vals = jnp.where(valid, k_e / jnp.maximum(rate, 1e-300), 0.0)
+        # acceptance K^{eps/(2lam+eps)} entirely in log space: the test
+        # log U < -C thin_scale cannot flush to an always-False `U < 0`
+        # when exp(-C thin_scale) underflows, and the accepted weight
+        # K/(rate*acc) is one exponential of the summed logs instead of a
+        # division by a product that underflows long before K does
+        log_acc = -c_e * thin_scale  # blocked (C = +inf) -> -inf, rejected
+        u_acc = jax.random.uniform(k_acc, (cap,), dtype=rb.dtype)
+        valid = valid & (jnp.log(u_acc) < log_acc)
+        alive = valid & (k_e > 0)
+        logw = (
+            jnp.log(jnp.where(alive, k_e, 1.0))
+            - jnp.log(jnp.maximum(rate, 1e-300))
+            - log_acc
+        )
+        vals = jnp.where(alive, jnp.exp(logw), 0.0)
+    else:
+        vals = jnp.where(valid, k_e / jnp.maximum(rate, 1e-300), 0.0)
     # Merge duplicate draws (multiplicity >= 2 of one pair) so the sparse
     # objective's entry-wise entropy sees the summed plan mass, then compact
     # every zero slot (rejected proposals, blocked pairs, overflow, merged
@@ -277,6 +401,84 @@ def sparsify_coo_mf(
     return sk, c_e
 
 
+def sparsify_coo_mf_log(
+    key: jax.Array,
+    ra: jax.Array,
+    rb: jax.Array,
+    s: float,
+    cap: int,
+    cost_entries_fn,
+    eps: float,
+    *,
+    thin_scale: float | None = None,
+) -> tuple[LogSparseKernelCOO, jax.Array]:
+    """Matrix-free **log-space** COO sketch: `sparsify_coo_mf`'s Poissonized
+    factorized draw, carrying ``logvals = -C_e/eps - log rate_e`` built from
+    gathered raw costs only (``cost_entries_fn(rows, cols) -> C_e``) — the
+    Gibbs kernel is never exponentiated, so the sketch survives ``eps``
+    where ``exp(-C/eps)`` flushes to zero.
+
+    UOT (``thin_scale = 1/(2 lam + eps)``): the eq. (11) acceptance
+    thinning runs in log space too (``log U < -C_e thin_scale``; rate
+    ``+= log acc``), so neither the sampled support nor the reweighting
+    collapses at small ``eps``/``lam``. Duplicate draws are merged by
+    segment-**logsumexp** instead of segment-sum. Returns ``(sketch, C_e)``
+    with the gathered costs index-aligned to the sketch arrays.
+    """
+    n, m = ra.shape[0], rb.shape[0]
+    k_counts, k_cols, k_acc = jax.random.split(key, 3)
+    counts = jax.random.poisson(k_counts, s * ra)  # (n,) per-row totals
+    total = jnp.sum(counts).astype(jnp.int32)
+    slot = jnp.arange(cap)
+    rows = jnp.searchsorted(jnp.cumsum(counts), slot, side="right")
+    rows = jnp.minimum(rows, n - 1).astype(jnp.int32)  # overflow slots park at n-1
+    u = jax.random.uniform(k_cols, (cap,), dtype=rb.dtype)
+    cols = jnp.searchsorted(jnp.cumsum(rb), u, side="right")
+    cols = jnp.minimum(cols, m - 1).astype(jnp.int32)
+    valid = slot < jnp.minimum(total, cap)
+    c_e = cost_entries_fn(rows, cols)
+    lograte = (
+        jnp.log(jnp.asarray(s, rb.dtype))
+        + jnp.log(jnp.maximum(ra[rows], 1e-300))
+        + jnp.log(jnp.maximum(rb[cols], 1e-300))
+    )
+    if thin_scale is not None:
+        log_acc = -c_e * thin_scale  # blocked (C = +inf) -> -inf, rejected
+        valid = valid & (
+            jnp.log(jax.random.uniform(k_acc, (cap,), dtype=rb.dtype)) < log_acc
+        )
+        lograte = lograte + log_acc
+    logvals = jnp.where(valid, -c_e / eps - lograte, -jnp.inf)
+    # Merge duplicate draws by logsumexp of their weights, then compact all
+    # dead slots (rejected proposals, blocked pairs, overflow, merged
+    # copies) to the tail — same invariants as sparsify_coo_mf with
+    # "vals == 0" replaced by "logvals == -inf".
+    order = jnp.lexsort((cols, rows))  # rows primary: stays row-sorted
+    rows, cols, logvals, c_e = rows[order], cols[order], logvals[order], c_e[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (rows[1:] != rows[:-1]) | (cols[1:] != cols[:-1])]
+    )
+    grp = jnp.cumsum(first) - 1
+    merged = segment_logsumexp(logvals, grp, num_segments=cap, indices_are_sorted=True)
+    logvals = jnp.where(first, merged[grp], -jnp.inf)
+    compact = jnp.argsort(jnp.isneginf(logvals))  # stable: alive first
+    rows, cols, logvals, c_e = (
+        rows[compact], cols[compact], logvals[compact], c_e[compact]
+    )
+    nz = ~jnp.isneginf(logvals)
+    sk = LogSparseKernelCOO(
+        jnp.where(nz, rows, n - 1).astype(jnp.int32),
+        jnp.where(nz, cols, m - 1).astype(jnp.int32),
+        logvals,
+        jnp.sum(nz).astype(jnp.int32),
+        n,
+        m,
+        csort=jnp.argsort(jnp.where(nz, cols, m - 1)).astype(jnp.int32),
+        overflowed=total > cap,
+    )
+    return sk, c_e
+
+
 def coo_matvec(sk: SparseKernelCOO, v: jax.Array) -> jax.Array:
     """``K~ v`` in O(cap); sorted scatter on construction-sorted sketches."""
     return jax.ops.segment_sum(
@@ -294,6 +496,57 @@ def coo_rmatvec(sk: SparseKernelCOO, u: jax.Array) -> jax.Array:
         return jax.ops.segment_sum(data, sk.cols, num_segments=sk.m)
     return jax.ops.segment_sum(
         data[sk.csort],
+        sk.cols[sk.csort],
+        num_segments=sk.m,
+        indices_are_sorted=True,
+    )
+
+
+def segment_logsumexp(
+    z: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    indices_are_sorted: bool = False,
+) -> jax.Array:
+    """Per-segment ``logsumexp`` via segment-max + segment-sum.
+
+    ``-inf`` entries are inert (their ``exp`` shift is masked to 0, so no
+    ``-inf - -inf = nan``), and empty / all-dead segments come out exactly
+    ``-inf`` — the log-domain mirror of `coo_matvec`'s zero rows. This is
+    the one implementation behind both the per-problem `coo_lse_row` /
+    `coo_lse_col` and the batched flat reduction in ``repro.kernels.ops``
+    (disjoint per-element segments), keeping batched results bitwise equal
+    to per-problem ones.
+    """
+    mx = jax.ops.segment_max(
+        z, seg, num_segments=num_segments, indices_are_sorted=indices_are_sorted
+    )
+    e = jnp.where(jnp.isneginf(z), 0.0, jnp.exp(z - mx[seg]))
+    tot = jax.ops.segment_sum(
+        e, seg, num_segments=num_segments, indices_are_sorted=indices_are_sorted
+    )
+    return jnp.where(jnp.isneginf(mx), -jnp.inf, mx + jnp.log(tot))
+
+
+def coo_lse_row(sk: LogSparseKernelCOO, y: jax.Array) -> jax.Array:
+    """``logsumexp_j(logvals_e + y[cols_e])`` per row in O(cap) — the
+    log-domain `coo_matvec` (callers pass ``y = g/eps``)."""
+    return segment_logsumexp(
+        sk.logvals + y[sk.cols],
+        sk.rows,
+        num_segments=sk.n,
+        indices_are_sorted=sk.csort is not None,
+    )
+
+
+def coo_lse_col(sk: LogSparseKernelCOO, y: jax.Array) -> jax.Array:
+    """``logsumexp_i(logvals_e + y[rows_e])`` per column in O(cap) — the
+    log-domain `coo_rmatvec`; runs the col-sorted permutation when available."""
+    z = sk.logvals + y[sk.rows]
+    if sk.csort is None:
+        return segment_logsumexp(z, sk.cols, num_segments=sk.m)
+    return segment_logsumexp(
+        z[sk.csort],
         sk.cols[sk.csort],
         num_segments=sk.m,
         indices_are_sorted=True,

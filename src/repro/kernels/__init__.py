@@ -8,6 +8,7 @@
 """
 from repro.kernels.ops import (
     batched_block_ell_matvec,
+    batched_coo_logsumexp,
     batched_coo_matvec,
     batched_coo_rmatvec,
     block_ell_matvec,
@@ -19,6 +20,7 @@ from repro.kernels.ops import (
 
 __all__ = [
     "batched_block_ell_matvec",
+    "batched_coo_logsumexp",
     "batched_coo_matvec",
     "batched_coo_rmatvec",
     "block_ell_matvec",

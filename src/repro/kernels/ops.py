@@ -17,15 +17,16 @@ from repro.kernels import block_ell as _be
 from repro.core.sinkhorn import SinkhornResult, generic_scaling_loop
 
 __all__ = [
-    "online_matvec",
-    "online_lse",
-    "block_ell_matvec",
     "batched_block_ell_matvec",
+    "batched_coo_logsumexp",
     "batched_coo_matvec",
     "batched_coo_rmatvec",
+    "block_ell_matvec",
     "fused_sinkhorn_solve",
     "gathered_kernel",
     "lru_scan",
+    "online_lse",
+    "online_matvec",
 ]
 
 
@@ -239,6 +240,41 @@ def batched_coo_rmatvec(
     return batched_coo_matvec(
         cols, vals, u_gathered, n=m, indices_are_sorted=indices_are_sorted
     )
+
+
+@functools.partial(jax.jit, static_argnames=("n", "indices_are_sorted"))
+def batched_coo_logsumexp(
+    idx: jax.Array,
+    z: jax.Array,
+    *,
+    n: int | None = None,
+    indices_are_sorted: bool = False,
+) -> jax.Array:
+    """B independent padded-COO segment-logsumexps as one flat reduction.
+
+    The log-domain `batched_coo_matvec` (the hot op of the batched
+    ``spar_sink_log`` solver): ``z`` is the per-entry summand
+    ``logvals + take_along_axis(y, cols, 1)`` — callers own the gather so
+    the transpose direction reuses this same reduction — and ``idx`` the
+    (B, cap) per-element segment ids. Disjoint per-element segments run the
+    single `repro.core.sparsify.segment_logsumexp` implementation, so
+    results are bitwise those of B separate per-problem calls; ``-inf``
+    entries (padding / dead sketch slots) are inert and empty segments come
+    out exactly ``-inf``. Returns (B, n).
+    """
+    from repro.core.sparsify import segment_logsumexp
+
+    bsz, _ = idx.shape
+    if n is None:
+        raise TypeError("batched_coo_logsumexp requires n (static output width)")
+    seg = (idx + (jnp.arange(bsz, dtype=jnp.int32) * n)[:, None]).ravel()
+    out = segment_logsumexp(
+        z.ravel(),
+        seg,
+        num_segments=bsz * n,
+        indices_are_sorted=indices_are_sorted,
+    )
+    return out.reshape(bsz, n)
 
 
 # ---------------------------------------------------------------------------

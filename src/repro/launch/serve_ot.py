@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.batch import BucketedExecutor
-from repro.core import Geometry, OTProblem, UOTProblem, s0, solve
+from repro.core import Geometry, OTProblem, PointCloudGeometry, UOTProblem, s0, solve
 from repro.core.api.solution import Solution
 
 __all__ = ["OTRequest", "OTServer"]
@@ -203,7 +203,11 @@ class OTServer:
 # --------------------------------------------------------------------------
 
 
-def _make_request_problems(n_requests: int, sizes, seed: int):
+def _make_request_problems(n_requests: int, sizes, seed: int,
+                           point_cloud: bool = False):
+    """Synthetic mixed OT/UOT traffic; ``point_cloud=True`` builds guarded
+    `PointCloudGeometry` problems (required by the matrix-free
+    ``spar_sink_mf`` method — raw costs, no normalization pass)."""
     rng = np.random.default_rng(seed)
     problems = []
     for i in range(n_requests):
@@ -211,7 +215,10 @@ def _make_request_problems(n_requests: int, sizes, seed: int):
         x = jnp.asarray(rng.uniform(size=(n, 3)))
         a = jnp.asarray(rng.dirichlet(np.ones(n)))
         b = jnp.asarray(rng.dirichlet(np.ones(n)))
-        geom = Geometry.from_points(x, normalize=True)
+        if point_cloud:
+            geom = PointCloudGeometry(x)
+        else:
+            geom = Geometry.from_points(x, normalize=True)
         if i % 2:
             problems.append(UOTProblem(geom, a * 5.0, b * 3.0, 0.1, lam=0.5))
         else:
@@ -235,9 +242,15 @@ def main() -> None:
     args = ap.parse_args()
 
     sizes = [int(v) for v in args.sizes.split(",")]
-    problems = _make_request_problems(args.requests, sizes, args.seed)
+    problems = _make_request_problems(
+        args.requests, sizes, args.seed,
+        point_cloud=args.method == "spar_sink_mf",
+    )
     opts: dict = {"max_iter": 2000}
-    if args.method == "spar_sink_coo":
+    # every sketching method needs a PRNG key + budget (spar_sink_coo,
+    # the log-domain spar_sink_log, matrix-free spar_sink_mf)
+    keyed = args.method.startswith("spar_sink") or args.method == "rand_sink"
+    if keyed:
         opts["s"] = args.s_mult * s0(max(sizes))
     keys = [jax.random.PRNGKey(i) for i in range(args.requests)]
 
@@ -249,7 +262,7 @@ def main() -> None:
         t0 = time.perf_counter()
         futures = []
         for i, p in enumerate(problems):
-            k = keys[i] if args.method == "spar_sink_coo" else None
+            k = keys[i] if keyed else None
             futures.append(server.submit(p, method=args.method, key=k, **opts))
         values = [float(f.result().value) for f in futures]
         return values, time.perf_counter() - t0
@@ -272,7 +285,7 @@ def main() -> None:
         t0 = time.perf_counter()
         for i, p in enumerate(problems):
             kw = dict(opts)
-            if args.method == "spar_sink_coo":
+            if keyed:
                 kw["key"] = keys[i]
             solve(p, method=args.method, **kw).block_until_ready()
         dt_serial = time.perf_counter() - t0

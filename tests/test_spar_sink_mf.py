@@ -319,6 +319,42 @@ def test_mf_solve_never_allocates_n_squared():
     assert biggest < 100 * n, biggest  # O(n + cap); n*m would be 1.7e10
 
 
+def test_mf_stabilized_log_solve_never_allocates_n_squared():
+    """Acceptance: the log-domain matrix-free path (spar_sink_mf with
+    stabilize=True) keeps the Õ(n) guarantee — trace sketch + potential
+    iteration + objective at n = 2^17 and assert nothing is near n*m."""
+    from repro.batch.solvers import sparse_log_potentials
+    from repro.core import build_mf_log_sketch
+    from repro.core.sinkhorn import _masked_log
+    from repro.core.spar_sink import coo_objective_ot_log_entries
+
+    n = 2 ** 17
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n)))
+    problem = OTProblem(PointCloudGeometry(x), a, b, 1e-3)
+    s = 100_000.0
+    cap = default_cap(s)
+
+    def mf_log_core(key):
+        sk, c_e = build_mf_log_sketch(problem, key, s, cap=cap)
+        f, g, t, err, status = sparse_log_potentials(
+            sk.rows[None], sk.cols[None], sk.logvals[None], sk.csort[None],
+            _masked_log(a)[None], _masked_log(b)[None],
+            jnp.asarray([1e-3], a.dtype), jnp.asarray([1.0], a.dtype),
+            n=n, m=n, tol=1e-3, max_iter=20,
+        )
+        from repro.core.sinkhorn import SinkhornResult
+
+        res = SinkhornResult(f[0], g[0], t[0], err[0], status[0])
+        return res.u, res.v, coo_objective_ot_log_entries(sk, c_e, res, 1e-3)
+
+    jaxpr = jax.make_jaxpr(mf_log_core)(jax.random.PRNGKey(0))
+    biggest = _max_aval_elems(jaxpr)
+    assert biggest < 100 * n, biggest  # O(n + cap); n*m would be 1.7e10
+
+
 def test_mf_end_to_end_2e17_completes():
     """Acceptance: solve(problem, method='spar_sink_mf') at n = 2^17 on CPU
     completes (the geometry guard makes any dense fallback raise)."""

@@ -4,8 +4,11 @@ Asserts that each guarded module's ``__all__`` (``repro.core``,
 ``repro.core.api``, ``repro.batch``, ``repro.kernels``) exactly matches
 the actually-exported public names: every declared name must resolve,
 every resolvable public name must be declared, no duplicates, and the
-list must stay sorted. Run directly (exit code 1 on drift) or through the
-tier-1 test in ``tests/test_api.py``:
+list must stay sorted. Also pins the solver-registry surface — the
+registered ``solve()`` method names and which of them have batched
+kernels — so adding/removing a method (e.g. the log-domain
+``spar_sink_log``) is a deliberate, reviewed change. Run directly (exit
+code 1 on drift) or through the tier-1 test in ``tests/test_api.py``:
 
     PYTHONPATH=src python tools/check_api_surface.py
 """
@@ -16,6 +19,23 @@ import sys
 import types
 
 MODULES = ("repro.core", "repro.core.api", "repro.batch", "repro.kernels")
+
+# the registered method surface (sorted); update deliberately when adding
+# a solver, together with the registry-table docstring and the README
+EXPECTED_METHODS = (
+    "dense",
+    "greenkhorn",
+    "log",
+    "nys_sink",
+    "rand_sink",
+    "screenkhorn_lite",
+    "spar_sink_block_ell",
+    "spar_sink_coo",
+    "spar_sink_dense",
+    "spar_sink_log",
+    "spar_sink_mf",
+)
+EXPECTED_BATCHED = ("dense", "log", "spar_sink_coo", "spar_sink_log", "spar_sink_mf")
 
 
 def check_module(modname: str) -> list[str]:
@@ -46,12 +66,32 @@ def check_module(modname: str) -> list[str]:
     return errors
 
 
+def check_registry() -> list[str]:
+    """Pin the registered per-problem and batched solver method names."""
+    from repro.batch import batchable_methods
+    from repro.core import available_methods
+
+    errors: list[str] = []
+    if tuple(available_methods()) != EXPECTED_METHODS:
+        errors.append(
+            "solver registry: expected "
+            f"{list(EXPECTED_METHODS)}, got {available_methods()}"
+        )
+    if tuple(batchable_methods()) != EXPECTED_BATCHED:
+        errors.append(
+            "batched registry: expected "
+            f"{list(EXPECTED_BATCHED)}, got {batchable_methods()}"
+        )
+    return errors
+
+
 def main() -> int:
     errors = [e for m in MODULES for e in check_module(m)]
+    errors += check_registry()
     for e in errors:
         print(f"API SURFACE DRIFT: {e}", file=sys.stderr)
     if not errors:
-        print(f"api surface OK: {', '.join(MODULES)}")
+        print(f"api surface OK: {', '.join(MODULES)} + solver registry")
     return 1 if errors else 0
 
 
