@@ -1,0 +1,96 @@
+"""Sustained-throughput benchmark of the `OTServer` microbatching front end.
+
+A closed-loop client streams ``--requests`` synthetic mixed OT/UOT problems
+through a warmed `repro.launch.serve_ot.OTServer` and reports sustained
+throughput (req/s) with the p50/p95/p99 request latency distribution taken
+from the server's own ``serve.latency_seconds`` histogram — so the numbers
+printed here are exactly what ``repro.obs.export()`` exposes in production.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--full | --smoke]
+
+Rows land in the shared ``benchmarks.common.record`` buffer; the JSON
+aggregator (``benchmarks/run.py --emit-json``) writes them as
+``BENCH_serve.json`` (schema ``repro-bench-v1``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import emit, log, record
+from repro.core import s0
+from repro.launch.serve_ot import OTServer, _make_request_problems
+
+
+def run(n_requests: int = 48, sizes=(96, 128, 200), max_batch: int = 16,
+        deadline_ms: float = 10.0, method: str = "spar_sink_coo",
+        s_mult: float = 8.0, seed: int = 0) -> dict:
+    problems = _make_request_problems(
+        n_requests, sizes, seed, point_cloud=method == "spar_sink_mf"
+    )
+    keyed = method.startswith("spar_sink") or method == "rand_sink"
+    opts: dict = {"max_iter": 2000}
+    if keyed:
+        opts["s"] = s_mult * s0(max(sizes))
+    keys = [jax.random.PRNGKey(i) for i in range(n_requests)]
+
+    server = OTServer(max_batch=max_batch, deadline_s=deadline_ms / 1e3)
+
+    def stream() -> float:
+        t0 = time.perf_counter()
+        futures = [
+            server.submit(p, method=method, key=keys[i] if keyed else None,
+                          **opts)
+            for i, p in enumerate(problems)
+        ]
+        for f in futures:
+            f.result()
+        return time.perf_counter() - t0
+
+    with server:
+        stream()  # warm the compile cache: steady-state throughput only
+        server.reset_stats()
+        dt = stream()
+
+    st = server.stats()
+    req_s = st["requests"] / dt
+    emit(f"serve/{method}/B{max_batch}", dt / max(st["requests"], 1) * 1e6,
+         f"req_s={req_s:.1f} p99_ms={st['p99_latency_s'] * 1e3:.0f}")
+    record(f"serve/{method}", method=method, n=max(sizes),
+           B=max_batch, wall_time_s=dt, rmae=None,
+           requests=st["requests"], req_per_s=req_s,
+           batches=st["batches"], mean_batch=st["mean_batch"],
+           p50_latency_s=st["p50_latency_s"],
+           p95_latency_s=st["p95_latency_s"],
+           p99_latency_s=st["p99_latency_s"],
+           compiles=st["compiles"])
+    log(f"{method}: {st['requests']} reqs in {dt:.2f}s -> {req_s:.1f} req/s "
+        f"over {st['batches']} batches (fill {st['mean_batch']:.1f}); "
+        f"latency p50={st['p50_latency_s'] * 1e3:.0f}ms "
+        f"p95={st['p95_latency_s'] * 1e3:.0f}ms "
+        f"p99={st['p99_latency_s'] * 1e3:.0f}ms")
+    return {"req_per_s": req_s, **st}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run; asserts the stats contract holds")
+    args = ap.parse_args()
+    if args.smoke:
+        st = run(n_requests=8, sizes=(64, 96), max_batch=4, deadline_ms=5.0)
+        assert st["requests"] == 8, st
+        assert st["req_per_s"] > 0, st
+        assert 0 < st["p50_latency_s"] <= st["p95_latency_s"] <= st["p99_latency_s"], st
+        log("serve smoke OK")
+    elif args.full:
+        run(n_requests=256, sizes=(96, 128, 200, 256), max_batch=32)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -4,11 +4,11 @@ Emits ``name,us_per_call,derived`` CSV on stdout (progress on stderr).
 Full-size variants: ``python -m benchmarks.bench_<x> --full``.
 
 ``--emit-json [DIR]`` runs the machine-readable perf suites (batched
-dispatch + time-vs-n + matrix-free scaling + RMAE-vs-eps) and writes
-standardized ``BENCH_batch.json`` / ``BENCH_time.json`` /
-``BENCH_scale.json`` / ``BENCH_eps.json`` (schema ``repro-bench-v1``:
-method, n, B, wall-time, RMAE per row) so the perf trajectory stays
-comparable across PRs.
+dispatch + time-vs-n + matrix-free scaling + RMAE-vs-eps + sustained
+serving throughput) and writes standardized ``BENCH_batch.json`` /
+``BENCH_time.json`` / ``BENCH_scale.json`` / ``BENCH_eps.json`` /
+``BENCH_serve.json`` (schema ``repro-bench-v1``: method, n, B, wall-time,
+RMAE per row) so the perf trajectory stays comparable across PRs.
 """
 from __future__ import annotations
 
@@ -19,7 +19,14 @@ import time
 
 
 def _emit_json(out_dir: str) -> None:
-    from benchmarks import bench_batch, bench_rmae_vs_eps, bench_scale, bench_time, common
+    from benchmarks import (
+        bench_batch,
+        bench_rmae_vs_eps,
+        bench_scale,
+        bench_serve,
+        bench_time,
+        common,
+    )
 
     os.makedirs(out_dir, exist_ok=True)
     print(f"--- batch (JSON -> {out_dir}) ---", file=sys.stderr)
@@ -35,6 +42,9 @@ def _emit_json(out_dir: str) -> None:
     bench_rmae_vs_eps.run(n=256, n_rep=4)
     bench_rmae_vs_eps.run(n=256, n_rep=4, lam=0.5)
     common.write_json(os.path.join(out_dir, "BENCH_eps.json"), "eps")
+    print("--- sustained serving throughput (JSON) ---", file=sys.stderr)
+    bench_serve.run()
+    common.write_json(os.path.join(out_dir, "BENCH_serve.json"), "serve")
 
 
 def main() -> None:

@@ -10,6 +10,10 @@ several support sizes, then solves it three ways:
    for spar_sink given the same PRNG keys), one jit'd program per shape
    bucket, reused across dispatches,
 3. through the `OTServer` microbatching queue, the serving front end.
+
+Along the way it prints the executor's `repro.obs` runtime metrics (jit
+cache hit rate, padding waste) — the same registry ``repro.obs.export()``
+renders as JSON / Prometheus text.
 """
 import time
 
@@ -22,6 +26,7 @@ import numpy as np
 from repro.batch import BucketedExecutor, batchable_methods
 from repro.core import Geometry, OTProblem, UOTProblem, s0, solve
 from repro.launch.serve_ot import OTServer
+from repro.obs import MetricsRegistry
 
 
 def make_problems(B=16, sizes=(96, 128, 200, 256), seed=0):
@@ -57,7 +62,8 @@ def main():
     t_loop = time.perf_counter() - t0
 
     # 2 -- one batched dispatch (first call compiles; second shows steady state)
-    executor = BucketedExecutor()
+    metrics = MetricsRegistry()  # private registry: numbers for this run only
+    executor = BucketedExecutor(metrics=metrics)
     executor.solve_batch(problems, method="spar_sink_coo", keys=keys, **opts)
     t0 = time.perf_counter()
     batch_sols = executor.solve_batch(
@@ -74,6 +80,13 @@ def main():
     plan = batch_sols[0].plan()
     print(f"first solution: value={float(batch_sols[0].value):+.4f} "
           f"plan={type(plan).__name__}(cap={plan.cap})")
+    hits = metrics.get_counter("executor.cache_hit")
+    misses = metrics.get_counter("executor.cache_miss")
+    waste = metrics.get_histogram("executor.padding_waste")
+    print(f"executor metrics: cache hit rate "
+          f"{hits / max(hits + misses, 1):.0%} ({hits:.0f}/{hits + misses:.0f} "
+          f"lookups), mean padding waste {waste['mean']:.0%} over "
+          f"{waste['count']} dispatches")
 
     # 3 -- serving front end: futures resolve to the same Solutions
     with OTServer(max_batch=8, deadline_s=0.02) as server:

@@ -21,6 +21,7 @@ One dispatch solves B independent problems:
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from typing import Sequence
 
@@ -45,6 +46,8 @@ from repro.core.sinkhorn import (
 )
 from repro.core.spar_sink import log_plan_entries
 from repro.core.sparsify import LogSparseKernelCOO
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import SolverTrace
 
 __all__ = ["BucketedExecutor"]
 
@@ -77,6 +80,14 @@ class BucketedExecutor:
     mesh:
         Optional `jax.sharding.Mesh`; when given, batch inputs are placed
         with the batch axis sharded over the mesh's data axes.
+    metrics:
+        `repro.obs.MetricsRegistry` receiving executor telemetry (defaults
+        to `repro.obs.default_registry`). Counters ``executor.cache_hit`` /
+        ``executor.cache_miss`` / ``executor.retrace``, histograms
+        ``executor.bucket_occupancy`` (live fraction of the padded batch
+        axis), ``executor.padding_waste`` (1 - true elements / padded
+        elements per dispatch) and ``executor.dispatch_seconds``, plus the
+        ``executor.cache_entries`` gauge.
     """
 
     def __init__(
@@ -85,10 +96,12 @@ class BucketedExecutor:
         cache_size: int = 16,
         min_bucket: int = 64,
         mesh: "jax.sharding.Mesh | None" = None,
+        metrics: MetricsRegistry | None = None,
     ):
         self.cache_size = cache_size
         self.min_bucket = min_bucket
         self.mesh = mesh
+        self.metrics = default_registry if metrics is None else metrics
         self._cache: OrderedDict[tuple, callable] = OrderedDict()
         self._trace_count = 0
 
@@ -105,18 +118,22 @@ class BucketedExecutor:
         fn = self._cache.get(key)
         if fn is not None:
             self._cache.move_to_end(key)
+            self.metrics.counter("executor.cache_hit")
             return fn
+        self.metrics.counter("executor.cache_miss")
         solver = get_batched_solver(method)
 
         def traced(bp: BatchedProblem, aux) -> BatchedResult:
             # Python side effect runs at trace time only — counts compiles.
             self._trace_count += 1
+            self.metrics.counter("executor.retrace")
             return solver(bp, aux, **opts)
 
         fn = jax.jit(traced)
         self._cache[key] = fn
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
+        self.metrics.gauge("executor.cache_entries", float(len(self._cache)))
         return fn
 
     # ------------------------------------------------------------ dispatch
@@ -196,7 +213,23 @@ class BucketedExecutor:
             else:
                 aux = None
             bp, aux = self._place(bp, aux)
+            # batch-shape telemetry: live fraction of the padded batch axis,
+            # and the fraction of padded (B, n_b, m_b) elements that carry
+            # no real problem data (support padding + duplicate pad slots)
+            b_pad = len(group) + pad
+            true_elems = sum(p.shape[0] * p.shape[1] for p in group)
+            self.metrics.observe("executor.bucket_occupancy", len(group) / b_pad)
+            self.metrics.observe(
+                "executor.padding_waste",
+                1.0 - true_elems / (b_pad * bucket[0] * bucket[1]),
+            )
+            t0 = time.perf_counter()
             br = self._compiled(bucket, method, solver_opts)(bp, aux)
+            # dispatch wall time: includes trace/compile on a cache miss;
+            # XLA execution is async, so this is not device compute time
+            self.metrics.observe(
+                "executor.dispatch_seconds", time.perf_counter() - t0
+            )
             log_sparse = method == "spar_sink_log" or (
                 method == "spar_sink_mf" and bool(solver_opts.get("stabilize"))
             )
@@ -227,8 +260,14 @@ class BucketedExecutor:
     ) -> Solution:
         n, m = problem.shape
         status = br.status[j] if br.status is not None else None
+        btr = getattr(br, "trace", None)
+        tr = (
+            SolverTrace(btr.err[j], btr.marg[j], btr.n_matvec[j])
+            if btr is not None
+            else None
+        )
         res = SinkhornResult(
-            br.u[j, :n], br.v[j, :m], br.n_iter[j], br.err[j], status
+            br.u[j, :n], br.v[j, :m], br.n_iter[j], br.err[j], status, tr
         )
         if br.rows is not None:
             rows, cols, vals, nnz = br.rows[j], br.cols[j], br.vals[j], br.nnz[j]

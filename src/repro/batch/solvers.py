@@ -51,6 +51,12 @@ from repro.core.sinkhorn import (
     uot_cost_from_plan,
 )
 from repro.core.spar_sink import default_cap
+from repro.obs.trace import (
+    SolverTrace,
+    empty_trace,
+    record_iteration,
+    resolve_trace_len,
+)
 
 __all__ = [
     "BatchedResult",
@@ -109,6 +115,9 @@ class BatchedResult(NamedTuple):
     nnz: jax.Array | None = None  # (B,) int32
     overflowed: jax.Array | None = None  # (B,) bool — sketch draw truncated
     status: jax.Array | None = None  # (B,) int32 STATUS_* convergence codes
+    #: batched per-iteration ring-buffer telemetry ((B, L) buffers + (B,)
+    #: matvec counter); ``None`` unless the solve ran with ``trace=True``
+    trace: SolverTrace | None = None
 
 
 # --------------------------------------------------------------------------
@@ -134,6 +143,7 @@ def batched_scaling_loop(
     tol: float = 1e-6,
     max_iter: int = 1000,
     patience: int = 100,
+    trace: bool | int = False,
 ):
     """Scaling-domain Sinkhorn over a batch; ``matvec: (B, m) -> (B, n)``.
 
@@ -143,6 +153,11 @@ def batched_scaling_loop(
     the slowest element is zero — frozen elements' updates are computed but
     discarded. Returns ``(u, v, n_iter, err, status)`` with per-element
     ``STATUS_*`` codes, like the per-problem `generic_scaling_loop`.
+
+    ``trace`` (static) appends a batched `repro.obs.SolverTrace` to the
+    return tuple — frozen elements stop recording, so each element's trace
+    is exactly its per-problem one; the default ``False`` adds no loop
+    state and no ops.
     """
     B, n = a.shape
     m = b.shape[1]
@@ -155,7 +170,8 @@ def batched_scaling_loop(
         return jnp.any(state[-1])
 
     def body(state):
-        u, v, t, err, best, since, active = state
+        u, v, t, err, best, since = state[:6]
+        active = state[-1]
         Kv = matvec(v)
         u_new = _safe_div(a, Kv) ** fe_col
         KTu = rmatvec(u_new)
@@ -172,7 +188,10 @@ def batched_scaling_loop(
         err = jnp.where(active, err_new, err)
         best = jnp.where(active, best_new, best)
         since = jnp.where(active, since_new, since)
-        t = jnp.where(active, t + 1, t)
+        out = (u, v, jnp.where(active, t + 1, t), err, best, since)
+        if trace:
+            out += (record_iteration(state[6], t, err_new, marg, active=active),)
+        t = out[2]
         active = (
             active
             & (err > tol)
@@ -180,7 +199,7 @@ def batched_scaling_loop(
             & (t < max_iter)
             & (since < patience)
         )
-        return u, v, t, err, best, since, active
+        return out + (active,)
 
     state = (
         u0,
@@ -189,16 +208,19 @@ def batched_scaling_loop(
         big,
         big,
         jnp.zeros((B,), jnp.int32),
-        jnp.ones((B,), bool),
     )
-    u, v, t, err, _, since, _ = jax.lax.while_loop(cond, body, state)
+    if trace:
+        state += (empty_trace(resolve_trace_len(trace), a.dtype, batch=B),)
+    final = jax.lax.while_loop(cond, body, state + (jnp.ones((B,), bool),))
+    u, v, t, err, _, since = final[:6]
     bad = ~(
         jnp.isfinite(err)
         & jnp.all(jnp.isfinite(u), axis=-1)
         & jnp.all(jnp.isfinite(v), axis=-1)
     )
     degenerate = (jnp.max(u, axis=-1) <= 0.0) | (jnp.max(v, axis=-1) <= 0.0)
-    return u, v, t, err, _status_code(bad, degenerate, err, tol, since >= patience)
+    out = (u, v, t, err, _status_code(bad, degenerate, err, tol, since >= patience))
+    return out + (final[6],) if trace else out
 
 
 def batched_log_loop(
@@ -211,10 +233,14 @@ def batched_log_loop(
     *,
     tol: float = 1e-9,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ):
     """Log-domain Sinkhorn over a batch on potentials; per-element freezing.
     ``lse_row(g): (B, m) -> (B, n)`` and vice versa; ``eps``/``fe`` are (B,).
-    Returns ``(f, g, n_iter, err, status)`` with per-element ``STATUS_*``."""
+    Returns ``(f, g, n_iter, err, status)`` with per-element ``STATUS_*``.
+    ``trace`` (static) appends a batched `repro.obs.SolverTrace` — the
+    column-marginal violation is computed only on the traced path (the
+    stopping rule here doesn't need it)."""
     B, n = loga.shape
     m = logb.shape[1]
     f0 = jnp.zeros((B, n), loga.dtype)
@@ -222,36 +248,54 @@ def batched_log_loop(
     neg_inf_a = jnp.isneginf(loga)
     neg_inf_b = jnp.isneginf(logb)
     scale = (fe * eps)[:, None]
+    if trace:
+        b_lin = jnp.exp(logb)
+        eps_col = eps[:, None]
 
     def cond(state):
         return jnp.any(state[-1])
 
     def body(state):
-        f, g, t, err, active = state
+        f, g, t, err = state[:4]
+        active = state[-1]
         f_new = scale * (loga - lse_row(g))
         f_new = jnp.where(neg_inf_a, -jnp.inf, f_new)
-        g_new = scale * (logb - lse_col(f_new))
+        lc = lse_col(f_new)
+        g_new = scale * (logb - lc)
         g_new = jnp.where(neg_inf_b, -jnp.inf, g_new)
         df = jnp.where(neg_inf_a, 0.0, jnp.abs(f_new - f))
         dg = jnp.where(neg_inf_b, 0.0, jnp.abs(g_new - g))
         err_new = jnp.max(df, axis=-1) + jnp.max(dg, axis=-1)
+        if trace:
+            # pre-update g: the column marginal of the plan after the
+            # f-update, mirroring the sparse loops' stall metric
+            col_marg = jnp.where(
+                jnp.isneginf(g) | jnp.isneginf(lc), 0.0, jnp.exp(g / eps_col + lc)
+            )
+            marg = jnp.sum(jnp.abs(col_marg - b_lin), axis=-1)
         keep = active[:, None]
         f = jnp.where(keep, f_new, f)
         g = jnp.where(keep, g_new, g)
         err = jnp.where(active, err_new, err)
-        t = jnp.where(active, t + 1, t)
+        out = (f, g, jnp.where(active, t + 1, t), err)
+        if trace:
+            out += (record_iteration(state[4], t, err_new, marg, active=active),)
+        t = out[2]
         active = active & (err > tol) & (t < max_iter)
-        return f, g, t, err, active
+        return out + (active,)
 
     state = (
         f0,
         g0,
         jnp.zeros((B,), jnp.int32),
         jnp.full((B,), jnp.inf, loga.dtype),
-        jnp.ones((B,), bool),
     )
-    f, g, t, err, _ = jax.lax.while_loop(cond, body, state)
-    return f, g, t, err, _batched_log_status(f, g, err, tol)
+    if trace:
+        state += (empty_trace(resolve_trace_len(trace), loga.dtype, batch=B),)
+    final = jax.lax.while_loop(cond, body, state + (jnp.ones((B,), bool),))
+    f, g, t, err = final[:4]
+    out = (f, g, t, err, _batched_log_status(f, g, err, tol))
+    return out + (final[4],) if trace else out
 
 
 def _batched_log_status(
@@ -284,6 +328,7 @@ def batched_sparse_log_loop(
     tol: float = 1e-6,
     max_iter: int = 1000,
     patience: int = 100,
+    trace: bool | int = False,
 ):
     """Per-element-frozen mirror of
     :func:`repro.core.sinkhorn.generic_sparse_log_loop`: log-domain
@@ -292,7 +337,8 @@ def batched_sparse_log_loop(
     (covers dead rows *and* inert bucket padding, which starts pinned), and
     the scaling loop's stall detection on the column-marginal violation.
     Each element reproduces the per-problem trajectory exactly.
-    Returns ``(f, g, n_iter, err, status)``.
+    Returns ``(f, g, n_iter, err, status)``; ``trace`` (static) appends a
+    batched `repro.obs.SolverTrace`.
     """
     B, n = loga.shape
     m = logb.shape[1]
@@ -309,7 +355,8 @@ def batched_sparse_log_loop(
         return jnp.any(state[-1])
 
     def body(state):
-        f, g, t, err, best, since, active = state
+        f, g, t, err, best, since = state[:6]
+        active = state[-1]
         lr = lse_row(g)
         f_new = scale * (loga - lr)
         f_new = jnp.where(neg_inf_a | jnp.isneginf(lr), -jnp.inf, f_new)
@@ -336,9 +383,12 @@ def batched_sparse_log_loop(
         err = jnp.where(active, err_new, err)
         best = jnp.where(active, best_new, best)
         since = jnp.where(active, since_new, since)
-        t = jnp.where(active, t + 1, t)
+        out = (f, g, jnp.where(active, t + 1, t), err, best, since)
+        if trace:
+            out += (record_iteration(state[6], t, err_new, marg, active=active),)
+        t = out[2]
         active = active & (err > tol) & (t < max_iter) & (since < patience)
-        return f, g, t, err, best, since, active
+        return out + (active,)
 
     state = (
         f0,
@@ -347,10 +397,13 @@ def batched_sparse_log_loop(
         big,
         big,
         jnp.zeros((B,), jnp.int32),
-        jnp.ones((B,), bool),
     )
-    f, g, t, err, _, since, _ = jax.lax.while_loop(cond, body, state)
-    return f, g, t, err, _batched_log_status(f, g, err, tol, since >= patience)
+    if trace:
+        state += (empty_trace(resolve_trace_len(trace), loga.dtype, batch=B),)
+    final = jax.lax.while_loop(cond, body, state + (jnp.ones((B,), bool),))
+    f, g, t, err, _, since = final[:6]
+    out = (f, g, t, err, _batched_log_status(f, g, err, tol, since >= patience))
+    return out + (final[6],) if trace else out
 
 
 # --------------------------------------------------------------------------
@@ -424,11 +477,12 @@ def batched_solve_dense(
     *,
     tol: float = 1e-6,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> BatchedResult:
     """Scaling-domain Sinkhorn on B dense Gibbs kernels at once."""
     del keys
     K = bp.kernel()
-    u, v, t, err, status = batched_scaling_loop(
+    res = batched_scaling_loop(
         lambda vv: jnp.einsum("bnm,bm->bn", K, vv),
         lambda uu: jnp.einsum("bnm,bn->bm", K, uu),
         bp.a,
@@ -436,10 +490,13 @@ def batched_solve_dense(
         bp.fe,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
+    u, v, t, err, status = res[:5]
     T = u[:, :, None] * K * v[:, None, :]
     return BatchedResult(
-        u, v, t, err, _batched_value_from_plan(bp, T), status=status
+        u, v, t, err, _batched_value_from_plan(bp, T), status=status,
+        trace=res[5] if trace else None,
     )
 
 
@@ -450,11 +507,12 @@ def batched_solve_log(
     *,
     tol: float = 1e-9,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> BatchedResult:
     """Log-domain Sinkhorn on B log-kernels; returns potentials ``(f, g)``."""
     del keys
     logK = bp.log_kernel()
-    f, g, t, err, status = batched_log_loop(
+    res = batched_log_loop(
         lambda gg: jax.scipy.special.logsumexp(
             logK + gg[:, None, :] / bp.eps[:, None, None], axis=2
         ),
@@ -467,11 +525,14 @@ def batched_solve_log(
         bp.fe,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
+    f, g, t, err, status = res[:5]
     logT = logK + f[:, :, None] / bp.eps[:, None, None] + g[:, None, :] / bp.eps[:, None, None]
     T = jnp.where(jnp.isneginf(logT), 0.0, jnp.exp(logT))
     return BatchedResult(
-        f, g, t, err, _batched_value_from_plan(bp, T), status=status
+        f, g, t, err, _batched_value_from_plan(bp, T), status=status,
+        trace=res[5] if trace else None,
     )
 
 
@@ -598,6 +659,7 @@ def _batched_sketch_solve(
     c_e: jax.Array,
     tol: float,
     max_iter: int,
+    trace: bool | int = False,
 ) -> BatchedResult:
     """Shared Spar-Sink core (paper Alg. 3/4) on a fixed-cap batched COO
     sketch: two batched **sorted** segment-sum mat-vecs per iteration
@@ -633,9 +695,11 @@ def _batched_sketch_solve(
             indices_are_sorted=True,
         )
 
-    u, v, t, err, status = batched_scaling_loop(
-        coo_matvec, coo_rmatvec, bp.a, bp.b, bp.fe, tol=tol, max_iter=max_iter
+    res = batched_scaling_loop(
+        coo_matvec, coo_rmatvec, bp.a, bp.b, bp.fe, tol=tol, max_iter=max_iter,
+        trace=trace,
     )
+    u, v, t, err, status = res[:5]
 
     t_e = (
         jnp.take_along_axis(u, rows, axis=1)
@@ -645,7 +709,7 @@ def _batched_sketch_solve(
     value = _batched_value_from_te(bp, t_e, c_e, rows, cols, n, m)
     return BatchedResult(
         u, v, t, err, value, rows, cols, vals, sketch.nnz, sketch.overflowed,
-        status,
+        status, res[5] if trace else None,
     )
 
 
@@ -682,11 +746,12 @@ def batched_solve_spar_sink(
     *,
     tol: float = 1e-6,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> BatchedResult:
     """Spar-Sink on a dense-built batched sketch; costs for the objective
     are gathered from the batched cost matrices."""
     c_e = jax.vmap(lambda C, r, c: C[r, c])(bp.cost, sketch.rows, sketch.cols)
-    return _batched_sketch_solve(bp, sketch, c_e, tol, max_iter)
+    return _batched_sketch_solve(bp, sketch, c_e, tol, max_iter, trace)
 
 
 @register_batched_solver("spar_sink_mf")
@@ -697,6 +762,7 @@ def batched_solve_spar_sink_mf(
     stabilize: bool = False,
     tol: float = 1e-6,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> BatchedResult:
     """Matrix-free batched Spar-Sink: the sketch (from
     `build_batched_mf_sketch`) carries its own gathered costs, so
@@ -712,8 +778,8 @@ def batched_solve_spar_sink_mf(
             "build it with build_batched_mf_sketch()"
         )
     if stabilize:
-        return _batched_sketch_log_solve(bp, sketch, tol, max_iter)
-    return _batched_sketch_solve(bp, sketch, sketch.cost_e, tol, max_iter)
+        return _batched_sketch_log_solve(bp, sketch, tol, max_iter, trace)
+    return _batched_sketch_solve(bp, sketch, sketch.cost_e, tol, max_iter, trace)
 
 
 @register_batched_solver("spar_sink_log")
@@ -723,6 +789,7 @@ def batched_solve_spar_sink_log(
     *,
     tol: float = 1e-6,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> BatchedResult:
     """Log-domain batched Spar-Sink on a log-space sketch
     (`build_batched_log_sketch`): potential updates through batched sorted
@@ -734,7 +801,7 @@ def batched_solve_spar_sink_log(
             "spar_sink_log needs a log-space sketch with gathered costs; "
             "build it with build_batched_log_sketch()"
         )
-    return _batched_sketch_log_solve(bp, sketch, tol, max_iter)
+    return _batched_sketch_log_solve(bp, sketch, tol, max_iter, trace)
 
 
 def sparse_log_potentials(
@@ -751,6 +818,7 @@ def sparse_log_potentials(
     m: int,
     tol: float,
     max_iter: int,
+    trace: bool | int = False,
 ):
     """Log-domain potentials of B sketched problems — the ONE iteration
     kernel behind both the per-problem ``spar_sink_log`` /
@@ -761,7 +829,8 @@ def sparse_log_potentials(
     ``exp``/``log`` whose fused codegen XLA may legally vary by a ulp
     between differently-shaped programs, while this flat batched reduction
     is B-invariant — so per-problem and batched results agree **bitwise**
-    per element. Returns ``(f, g, n_iter, err, status)``, all (B, ·).
+    per element. Returns ``(f, g, n_iter, err, status)``, all (B, ·);
+    ``trace`` (static) appends a batched `repro.obs.SolverTrace`.
     """
     from repro.kernels.ops import batched_coo_logsumexp
 
@@ -788,7 +857,8 @@ def sparse_log_potentials(
         )
 
     return batched_sparse_log_loop(
-        lse_row, lse_col, loga, logb, eps, fe, tol=tol, max_iter=max_iter
+        lse_row, lse_col, loga, logb, eps, fe, tol=tol, max_iter=max_iter,
+        trace=trace,
     )
 
 
@@ -797,6 +867,7 @@ def _batched_sketch_log_solve(
     sketch: BatchedSketch,
     tol: float,
     max_iter: int,
+    trace: bool | int = False,
 ) -> BatchedResult:
     """Shared log-domain Spar-Sink core on a fixed-cap batched COO sketch
     whose ``vals`` carry ``logvals``: two batched **sorted**
@@ -804,7 +875,7 @@ def _batched_sketch_log_solve(
     potential-based objective per element."""
     _, n, m = bp.shape
     rows, cols, logvals = sketch.rows, sketch.cols, sketch.vals
-    f, g, t, err, status = sparse_log_potentials(
+    res = sparse_log_potentials(
         rows,
         cols,
         logvals,
@@ -817,7 +888,9 @@ def _batched_sketch_log_solve(
         m=m,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
+    f, g, t, err, status = res[:5]
     eps_col = bp.eps[:, None]
     logt = (
         logvals
@@ -828,5 +901,5 @@ def _batched_sketch_log_solve(
     value = _batched_value_from_te(bp, t_e, sketch.cost_e, rows, cols, n, m)
     return BatchedResult(
         f, g, t, err, value, rows, cols, logvals, sketch.nnz, sketch.overflowed,
-        status,
+        status, res[5] if trace else None,
     )

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sinkhorn import STATUS_CONVERGED, STATUS_LABELS, SinkhornResult
+from repro.obs.trace import Diagnostics, SketchStats
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.api.problems import OTProblem
@@ -85,6 +86,9 @@ class Solution:
     #: trailing entries were dropped — the estimate is then biased low and
     #: the caller should re-solve with a larger ``cap`` (sparse solvers only)
     overflowed: jax.Array | None = None
+    #: sketch-quality stats (`repro.obs.SketchStats`) — populated by the
+    #: sketching solvers when the solve ran with ``trace=True``
+    sketch_stats: SketchStats | None = None
     _plan_thunk: Callable[[], "SparsePlan | jax.Array"] | None = field(
         default=None, repr=False
     )
@@ -151,6 +155,24 @@ class Solution:
         """Host-side human-readable status (syncs the device scalar)."""
         s = self.result.status
         return None if s is None else STATUS_LABELS[int(s)]
+
+    # ---------------------------------------------------------- diagnostics
+
+    @property
+    def diagnostics(self) -> Diagnostics | None:
+        """Per-solve observability record (`repro.obs.Diagnostics`): the
+        iteration ring-buffer trace plus sketch-quality stats. ``None``
+        unless the solve ran with ``trace=True`` (the default ``trace=False``
+        path carries no telemetry at all — see README "Observability")."""
+        tr = getattr(self.result, "trace", None)
+        if tr is None and self.sketch_stats is None:
+            return None
+        return Diagnostics(
+            trace=tr,
+            n_iter=self.result.n_iter,
+            status=self.result.status,
+            sketch=self.sketch_stats,
+        )
 
     # ------------------------------------------------------------------ plan
 

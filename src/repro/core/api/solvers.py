@@ -72,6 +72,7 @@ from repro.core.spar_sink import (
     default_max_blocks,
     log_plan_entries,
 )
+from repro.obs.trace import SolverTrace, sketch_diagnostics
 
 __all__ = [
     "DEFAULT_TOL",
@@ -272,6 +273,12 @@ def _coo_value(problem: OTProblem, sk, res) -> jax.Array:
     return coo_objective_ot(sk, problem.geom.cost, res, problem.eps)
 
 
+def _sketch_stats(sk, trace):
+    """Sketch diagnostics, computed only when telemetry was requested (the
+    ``trace=False`` fast path does zero extra work)."""
+    return sketch_diagnostics(sk) if trace else None
+
+
 def _dense_solution(problem: OTProblem, method: str, res, Kt: jax.Array, *, nnz=None) -> Solution:
     """Assemble a `Solution` whose plan is a dense ``diag(u) Kt diag(v)``.
 
@@ -300,31 +307,43 @@ def _dense_solution(problem: OTProblem, method: str, res, Kt: jax.Array, *, nnz=
 
 @register_solver("dense")
 def _solve_dense(
-    problem: OTProblem, *, tol: float = DEFAULT_TOL, max_iter: int = 1000
+    problem: OTProblem,
+    *,
+    tol: float = DEFAULT_TOL,
+    max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """Scaling-domain Sinkhorn on the dense Gibbs kernel (Alg. 1 / Alg. 2)."""
     K = problem.kernel()
     if problem.fe == 1.0:
-        res = sinkhorn(K, problem.a, problem.b, tol=tol, max_iter=max_iter)
+        res = sinkhorn(K, problem.a, problem.b, tol=tol, max_iter=max_iter, trace=trace)
     else:
         res = sinkhorn_uot(
-            K, problem.a, problem.b, problem.lam, problem.eps, tol=tol, max_iter=max_iter
+            K, problem.a, problem.b, problem.lam, problem.eps, tol=tol,
+            max_iter=max_iter, trace=trace,
         )
     return _dense_solution(problem, "dense", res, K)
 
 
 @register_solver("log")
 def _solve_log(
-    problem: OTProblem, *, tol: float = DEFAULT_TOL, max_iter: int = 1000
+    problem: OTProblem,
+    *,
+    tol: float = DEFAULT_TOL,
+    max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """Log-domain Sinkhorn on dual potentials (survives ``eps`` down to 1e-3)."""
     logK = problem.log_kernel()
     eps = float(problem.eps)
     if problem.fe == 1.0:
-        res = sinkhorn_log(logK, problem.a, problem.b, eps, tol=tol, max_iter=max_iter)
+        res = sinkhorn_log(
+            logK, problem.a, problem.b, eps, tol=tol, max_iter=max_iter, trace=trace
+        )
     else:
         res = sinkhorn_uot_log(
-            logK, problem.a, problem.b, float(problem.lam), eps, tol=tol, max_iter=max_iter
+            logK, problem.a, problem.b, float(problem.lam), eps, tol=tol,
+            max_iter=max_iter, trace=trace,
         )
     T = plan_from_potentials(res.u, logK, res.v, eps)
     value = problem.objective(T)
@@ -355,6 +374,7 @@ def _solve_spar_sink_coo(
     probs: jax.Array | None = None,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """Spar-Sink on the padded-COO sketch: O(s) iterations, O(cap) plan.
 
@@ -364,13 +384,16 @@ def _solve_spar_sink_coo(
     ``spar_sink_log`` there.
     """
     sk = build_coo_sketch(problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage)
-    res = _coo_scaling_loop(problem, sk, tol, max_iter)
+    res = _coo_scaling_loop(problem, sk, tol, max_iter, trace)
     return _coo_solution(
-        "spar_sink_coo", problem, sk, res, _coo_value(problem, sk, res)
+        "spar_sink_coo", problem, sk, res, _coo_value(problem, sk, res),
+        sketch_stats=_sketch_stats(sk, trace),
     )
 
 
-def _coo_scaling_loop(problem: OTProblem, sk, tol: float, max_iter: int):
+def _coo_scaling_loop(
+    problem: OTProblem, sk, tol: float, max_iter: int, trace: bool | int = False
+):
     return generic_scaling_loop(
         lambda v: sparsify.coo_matvec(sk, v),
         lambda u: sparsify.coo_rmatvec(sk, u),
@@ -379,10 +402,13 @@ def _coo_scaling_loop(problem: OTProblem, sk, tol: float, max_iter: int):
         problem.fe,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
 
 
-def _coo_solution(method: str, problem: OTProblem, sk, res, value) -> Solution:
+def _coo_solution(
+    method: str, problem: OTProblem, sk, res, value, sketch_stats=None
+) -> Solution:
     def sparse_plan() -> SparsePlan:
         # T~ restricted to kept entries; padded slots carry vals == 0.
         return SparsePlan(
@@ -397,11 +423,14 @@ def _coo_solution(method: str, problem: OTProblem, sk, res, value) -> Solution:
         domain="scaling",
         nnz=sk.nnz,
         overflowed=sk.overflowed,
+        sketch_stats=sketch_stats,
         _plan_thunk=sparse_plan,
     )
 
 
-def _sparse_log_loop(problem: OTProblem, sk, tol: float, max_iter: int):
+def _sparse_log_loop(
+    problem: OTProblem, sk, tol: float, max_iter: int, trace: bool | int = False
+):
     """Run the sorted-COO segment-logsumexp iteration on a log-space sketch.
 
     Dispatches to `repro.batch.solvers.sparse_log_potentials` at B = 1 —
@@ -418,7 +447,7 @@ def _sparse_log_loop(problem: OTProblem, sk, tol: float, max_iter: int):
     eps = float(problem.eps)
     n, m = problem.shape
     csort = sk.csort[None] if sk.csort is not None else None
-    f, g, t, err, status = sparse_log_potentials(
+    res = sparse_log_potentials(
         sk.rows[None],
         sk.cols[None],
         sk.logvals[None],
@@ -431,8 +460,14 @@ def _sparse_log_loop(problem: OTProblem, sk, tol: float, max_iter: int):
         m=m,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
-    return SinkhornResult(f[0], g[0], t[0], err[0], status[0])
+    f, g, t, err, status = res[:5]
+    tr = None
+    if trace:  # slice the B = 1 batched trace down to the per-problem shape
+        btr = res[5]
+        tr = SolverTrace(btr.err[0], btr.marg[0], btr.n_matvec[0])
+    return SinkhornResult(f[0], g[0], t[0], err[0], status[0], tr)
 
 
 def _coo_log_value(problem: OTProblem, sk, c_e, res) -> jax.Array:
@@ -445,7 +480,9 @@ def _coo_log_value(problem: OTProblem, sk, c_e, res) -> jax.Array:
     return coo_objective_ot_log_entries(sk, c_e, res, problem.eps)
 
 
-def _coo_log_solution(method: str, problem: OTProblem, sk, res, value) -> Solution:
+def _coo_log_solution(
+    method: str, problem: OTProblem, sk, res, value, sketch_stats=None
+) -> Solution:
     eps = float(problem.eps)
 
     def sparse_plan() -> SparsePlan:
@@ -462,6 +499,7 @@ def _coo_log_solution(method: str, problem: OTProblem, sk, res, value) -> Soluti
         domain="log",
         nnz=sk.nnz,
         overflowed=sk.overflowed,
+        sketch_stats=sketch_stats,
         _plan_thunk=sparse_plan,
     )
 
@@ -477,6 +515,7 @@ def _solve_spar_sink_log(
     probs: jax.Array | None = None,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """**Log-domain** Spar-Sink (paper Alg. 3/4), safe for small ``eps``.
 
@@ -492,9 +531,10 @@ def _solve_spar_sink_log(
     sk, c_e = build_coo_log_sketch(
         problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage
     )
-    res = _sparse_log_loop(problem, sk, tol, max_iter)
+    res = _sparse_log_loop(problem, sk, tol, max_iter, trace)
     return _coo_log_solution(
-        "spar_sink_log", problem, sk, res, _coo_log_value(problem, sk, c_e, res)
+        "spar_sink_log", problem, sk, res, _coo_log_value(problem, sk, c_e, res),
+        sketch_stats=_sketch_stats(sk, trace),
     )
 
 
@@ -510,6 +550,7 @@ def _solve_spar_sink_mf(
     stabilize: bool = False,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """Matrix-free Spar-Sink: Õ(n) end to end, no (n, m) array anywhere.
 
@@ -542,23 +583,27 @@ def _solve_spar_sink_mf(
             sk, c_e = build_coo_log_sketch(problem, key, s, cap=cap)
         else:
             sk, c_e = build_mf_log_sketch(problem, key, s, cap=cap)
-        res = _sparse_log_loop(problem, sk, tol, max_iter)
+        res = _sparse_log_loop(problem, sk, tol, max_iter, trace)
         return _coo_log_solution(
-            "spar_sink_mf", problem, sk, res, _coo_log_value(problem, sk, c_e, res)
+            "spar_sink_mf", problem, sk, res, _coo_log_value(problem, sk, c_e, res),
+            sketch_stats=_sketch_stats(sk, trace),
         )
     if shared_variates:
         sk = build_coo_sketch(problem, key, s, cap=cap)  # guarded dense draw
         c_e = geom.cost_entries(sk.rows, sk.cols)
     else:
         sk, c_e = build_mf_sketch(problem, key, s, cap=cap, impl=impl)
-    res = _coo_scaling_loop(problem, sk, tol, max_iter)
+    res = _coo_scaling_loop(problem, sk, tol, max_iter, trace)
     if isinstance(problem, UOTProblem) and not problem.is_balanced:
         value = coo_objective_uot_entries(
             sk, c_e, res, problem.a, problem.b, float(problem.lam), problem.eps
         )
     else:
         value = coo_objective_ot_entries(sk, c_e, res, problem.eps)
-    return _coo_solution("spar_sink_mf", problem, sk, res, value)
+    return _coo_solution(
+        "spar_sink_mf", problem, sk, res, value,
+        sketch_stats=_sketch_stats(sk, trace),
+    )
 
 
 @register_solver("rand_sink")
@@ -570,6 +615,7 @@ def _solve_rand_sink(
     cap: int | None = None,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """Spar-Sink with uniform probabilities (the paper's Rand-Sink baseline).
 
@@ -585,6 +631,7 @@ def _solve_rand_sink(
         probs=sparsify.uniform_prob_factors(n, m, problem.geom.dtype),
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
     sol.method = "rand_sink"
     return sol
@@ -600,6 +647,7 @@ def _solve_spar_sink_dense(
     probs: jax.Array | None = None,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """Exact eq.(7) sketch held as a dense masked array (O(n^2) reference;
     scaling domain — same small-``eps`` caveat as ``spar_sink_coo``)."""
@@ -614,6 +662,7 @@ def _solve_spar_sink_dense(
         problem.fe,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
     return _dense_solution(problem, "spar_sink_dense", res, Kt, nnz=jnp.sum(Kt > 0))
 
@@ -630,6 +679,7 @@ def _solve_spar_sink_block_ell(
     probs: jax.Array | None = None,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> Solution:
     """Tile-granular sketch in block-ELL layout (dense MXU work per tile;
     scaling domain — same small-``eps`` caveat as ``spar_sink_coo``)."""
@@ -648,6 +698,7 @@ def _solve_spar_sink_block_ell(
         problem.fe,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
     # Transient densification for the objective (legacy behavior); the
     # Solution itself retains only the O(s*Bk) block-ELL tiles.

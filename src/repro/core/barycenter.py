@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparsify
+from repro.core.sinkhorn import STATUS_CONVERGED, _status_code
 
 __all__ = [
     "IBPResult",
@@ -34,6 +35,13 @@ class IBPResult(NamedTuple):
     v: jax.Array  # (m, n)
     n_iter: jax.Array
     err: jax.Array
+    #: why the iteration stopped — a ``repro.core.sinkhorn.STATUS_*`` code
+    #: (non-finite / all-zero barycenters no longer pass for convergence)
+    status: jax.Array | None = None
+
+    @property
+    def converged(self) -> jax.Array | None:
+        return None if self.status is None else self.status == STATUS_CONVERGED
 
 
 def _ibp_loop(matvec, rmatvec, bs, w, n, *, tol, max_iter, dtype):
@@ -67,7 +75,12 @@ def _ibp_loop(matvec, rmatvec, bs, w, n, *, tol, max_iter, dtype):
     q, u, v, t, err = jax.lax.while_loop(
         cond, body, (q0, u0, v0, jnp.array(0, jnp.int32), jnp.array(jnp.inf, dtype))
     )
-    return IBPResult(q, u, v, t, err)
+    bad = jnp.logical_or(
+        ~jnp.isfinite(err), ~jnp.all(jnp.isfinite(q))
+    )
+    degenerate = jnp.all(q == 0)
+    status = _status_code(bad, degenerate, err, tol, jnp.array(False))
+    return IBPResult(q, u, v, t, err, status)
 
 
 @partial(jax.jit, static_argnames=("tol", "max_iter"))

@@ -28,6 +28,7 @@ def sinkhorn_divergence(
     key: jax.Array | None = None,
     tol: float = 1e-6,
     max_iter: int = 500,
+    with_status: bool = False,
     **opts,
 ) -> jax.Array:
     """``S(α, β)`` with every OT_eps term solved by the registered ``method``.
@@ -35,6 +36,12 @@ def sinkhorn_divergence(
     Sketching methods (``spar_sink_coo``, ``rand_sink``, ...) need ``key``
     and ``s`` (passed via ``opts``); the key is split across the three terms.
     A ``key`` passed alongside a deterministic method is ignored.
+
+    ``with_status=True`` returns ``(value, status)`` where ``status`` is the
+    worst ``STATUS_*`` code across the three OT_eps solves (the codes are
+    ordered by severity, so a single non-converged term taints the
+    divergence instead of vanishing into the difference); ``None`` if the
+    method reports no status.
     """
     from repro.core.api.registry import method_accepts
 
@@ -52,12 +59,22 @@ def sinkhorn_divergence(
 
     def term(pts_a, pts_b, wa, wb, kw):
         problem = OTProblem(Geometry.from_points(pts_a, pts_b), wa, wb, eps)
-        return solve(problem, method=method, **common, **kw, **opts).value
+        sol = solve(problem, method=method, **common, **kw, **opts)
+        return sol.value, sol.status
 
-    sxy = term(x, y, a, b, keys[0])
-    sxx = term(x, x, a, a, keys[1])
-    syy = term(y, y, b, b, keys[2])
-    return sxy - 0.5 * (sxx + syy)
+    sxy, st_xy = term(x, y, a, b, keys[0])
+    sxx, st_xx = term(x, x, a, a, keys[1])
+    syy, st_yy = term(y, y, b, b, keys[2])
+    value = sxy - 0.5 * (sxx + syy)
+    if not with_status:
+        return value
+    statuses = [s for s in (st_xy, st_xx, st_yy) if s is not None]
+    status = None
+    if statuses:
+        status = statuses[0]
+        for s in statuses[1:]:
+            status = jax.numpy.maximum(status, s)
+    return value, status
 
 
 def spar_sink_divergence(

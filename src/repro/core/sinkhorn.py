@@ -22,6 +22,13 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import (
+    SolverTrace,
+    empty_trace,
+    record_iteration,
+    resolve_trace_len,
+)
+
 __all__ = [
     "STATUS_CONVERGED",
     "STATUS_DEGENERATE",
@@ -87,6 +94,9 @@ class SinkhornResult(NamedTuple):
     #: why the loop stopped — one of the ``STATUS_*`` codes; ``None`` on
     #: hand-built results (e.g. baselines that budget by update count)
     status: jax.Array | None = None
+    #: per-iteration ring-buffer telemetry (`repro.obs.SolverTrace`);
+    #: ``None`` unless the loop ran with ``trace=True``
+    trace: SolverTrace | None = None
 
     @property
     def converged(self) -> jax.Array | None:
@@ -119,6 +129,7 @@ def generic_scaling_loop(
     tol: float = 1e-6,
     max_iter: int = 1000,
     patience: int = 100,
+    trace: bool | int = False,
 ) -> SinkhornResult:
     """Scaling-domain Sinkhorn: the shared engine behind Algorithms 1-4.
 
@@ -135,6 +146,10 @@ def generic_scaling_loop(
     all-zero scalings (a sketch whose values underflowed: ``_safe_div``
     silently zeroes every update) are surfaced as ``STATUS_NONFINITE`` /
     ``STATUS_DEGENERATE`` instead of passing for convergence.
+
+    ``trace`` (static; ``True`` or a ring length) carries a
+    `repro.obs.SolverTrace` through the loop — the default ``False`` path
+    adds no loop state and no ops (jaxpr-identical to the untraced loop).
     """
     n, m = a.shape[0], b.shape[0]
     u0 = jnp.ones((n,), dtype=a.dtype)
@@ -144,13 +159,13 @@ def generic_scaling_loop(
     big = jnp.array(jnp.finfo(a.dtype).max, a.dtype)
 
     def cond(state):
-        _, _, t, err, _, since = state
+        t, err, since = state[2], state[3], state[5]
         return (
             (err > tol) & jnp.isfinite(err) & (t < max_iter) & (since < patience)
         )
 
     def body(state):
-        u, v, t, _, best, since = state
+        u, v, t, _, best, since = state[:6]
         Kv = matvec(v)
         u_new = _safe_div(a, Kv) ** fe
         KTu = rmatvec(u_new)
@@ -161,19 +176,27 @@ def generic_scaling_loop(
         improved = marg < best * (1.0 - 1e-4)
         best = jnp.minimum(best, marg)
         since = jnp.where(improved, 0, since + 1)
-        return u_new, v_new, t + 1, err, best, since
+        out = (u_new, v_new, t + 1, err, best, since)
+        if trace:
+            out += (record_iteration(state[6], t, err, marg),)
+        return out
 
-    u, v, t, err, _, since = jax.lax.while_loop(
-        cond,
-        body,
-        (u0, v0, jnp.array(0, jnp.int32), big, big, jnp.array(0, jnp.int32)),
-    )
+    init = (u0, v0, jnp.array(0, jnp.int32), big, big, jnp.array(0, jnp.int32))
+    if trace:
+        init += (empty_trace(resolve_trace_len(trace), a.dtype),)
+    final = jax.lax.while_loop(cond, body, init)
+    u, v, t, err, _, since = final[:6]
     bad = ~(
         jnp.isfinite(err) & jnp.all(jnp.isfinite(u)) & jnp.all(jnp.isfinite(v))
     )
     degenerate = (jnp.max(u) <= 0.0) | (jnp.max(v) <= 0.0)  # scalings are >= 0
     return SinkhornResult(
-        u, v, t, err, _status_code(bad, degenerate, err, tol, since >= patience)
+        u,
+        v,
+        t,
+        err,
+        _status_code(bad, degenerate, err, tol, since >= patience),
+        final[6] if trace else None,
     )
 
 
@@ -187,6 +210,7 @@ def generic_log_loop(
     *,
     tol: float = 1e-9,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> SinkhornResult:
     """Log-domain Sinkhorn on dual potentials ``f = eps log u``, ``g = eps log v``.
 
@@ -194,32 +218,52 @@ def generic_log_loop(
     ``lse_col(f) = logsumexp_i(log K_ij + f_i / eps)`` (shape m).
     Stopping is on ``max|f - f_prev| + max|g - g_prev| <= tol`` (potential
     oscillation — the log-domain analogue of the paper's L1 rule).
+
+    This loop doesn't need a marginal for its stopping rule, so ``trace``
+    (static) additionally computes the column-marginal violation
+    ``sum|exp(g/eps + lse_col(f_new)) - b|`` for the ring buffer; with the
+    default ``trace=False`` no marginal is computed at all.
     """
     n, m = loga.shape[0], logb.shape[0]
     f0 = jnp.zeros((n,), loga.dtype)
     g0 = jnp.zeros((m,), logb.dtype)
     neg_inf_a = jnp.isneginf(loga)
     neg_inf_b = jnp.isneginf(logb)
+    if trace:
+        b_lin = jnp.exp(logb)
 
     def cond(state):
-        _, _, t, err = state
+        t, err = state[2], state[3]
         return jnp.logical_and(err > tol, t < max_iter)
 
     def body(state):
-        f, g, t, _ = state
+        f, g, t, _ = state[:4]
         f_new = fe * eps * (loga - lse_row(g))
         f_new = jnp.where(neg_inf_a, -jnp.inf, f_new)
-        g_new = fe * eps * (logb - lse_col(f_new))
+        lc = lse_col(f_new)
+        g_new = fe * eps * (logb - lc)
         g_new = jnp.where(neg_inf_b, -jnp.inf, g_new)
         df = jnp.where(neg_inf_a, 0.0, jnp.abs(f_new - f))
         dg = jnp.where(neg_inf_b, 0.0, jnp.abs(g_new - g))
         err = jnp.max(df) + jnp.max(dg)
-        return f_new, g_new, t + 1, err
+        out = (f_new, g_new, t + 1, err)
+        if trace:
+            col_marg = jnp.where(
+                jnp.isneginf(g) | jnp.isneginf(lc), 0.0, jnp.exp(g / eps + lc)
+            )
+            marg = jnp.sum(jnp.abs(col_marg - b_lin))
+            out += (record_iteration(state[4], t, err, marg),)
+        return out
 
-    f, g, t, err = jax.lax.while_loop(
-        cond, body, (f0, g0, jnp.array(0, jnp.int32), jnp.array(jnp.inf, loga.dtype))
+    init = (f0, g0, jnp.array(0, jnp.int32), jnp.array(jnp.inf, loga.dtype))
+    if trace:
+        init += (empty_trace(resolve_trace_len(trace), loga.dtype),)
+    final = jax.lax.while_loop(cond, body, init)
+    f, g, t, err = final[:4]
+    return SinkhornResult(
+        f, g, t, err, _log_domain_status(f, g, err, tol),
+        final[4] if trace else None,
     )
-    return SinkhornResult(f, g, t, err, _log_domain_status(f, g, err, tol))
 
 
 def _log_domain_status(
@@ -252,6 +296,7 @@ def generic_sparse_log_loop(
     tol: float = 1e-6,
     max_iter: int = 1000,
     patience: int = 100,
+    trace: bool | int = False,
 ) -> SinkhornResult:
     """Log-domain Sinkhorn on a *sparse* (sketched) kernel.
 
@@ -283,11 +328,11 @@ def generic_sparse_log_loop(
     b_lin = jnp.exp(logb)  # loop-invariant (matches the batched mirror)
 
     def cond(state):
-        _, _, t, err, _, since = state
+        t, err, since = state[2], state[3], state[5]
         return (err > tol) & (t < max_iter) & (since < patience)
 
     def body(state):
-        f, g, t, _, best, since = state
+        f, g, t, _, best, since = state[:6]
         lr = lse_row(g)
         f_new = fe * eps * (loga - lr)
         f_new = jnp.where(neg_inf_a | jnp.isneginf(lr), -jnp.inf, f_new)
@@ -311,15 +356,23 @@ def generic_sparse_log_loop(
         improved = marg < best * (1.0 - 1e-4)
         best = jnp.minimum(best, marg)
         since = jnp.where(improved, 0, since + 1)
-        return f_new, g_new, t + 1, err, best, since
+        out = (f_new, g_new, t + 1, err, best, since)
+        if trace:
+            out += (record_iteration(state[6], t, err, marg),)
+        return out
 
-    f, g, t, err, _, since = jax.lax.while_loop(
-        cond,
-        body,
-        (f0, g0, jnp.array(0, jnp.int32), big, big, jnp.array(0, jnp.int32)),
-    )
+    init = (f0, g0, jnp.array(0, jnp.int32), big, big, jnp.array(0, jnp.int32))
+    if trace:
+        init += (empty_trace(resolve_trace_len(trace), loga.dtype),)
+    final = jax.lax.while_loop(cond, body, init)
+    f, g, t, err, _, since = final[:6]
     return SinkhornResult(
-        f, g, t, err, _log_domain_status(f, g, err, tol, since >= patience)
+        f,
+        g,
+        t,
+        err,
+        _log_domain_status(f, g, err, tol, since >= patience),
+        final[6] if trace else None,
     )
 
 
@@ -328,17 +381,24 @@ def generic_sparse_log_loop(
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("tol", "max_iter"))
+@partial(jax.jit, static_argnames=("tol", "max_iter", "trace"))
 def sinkhorn(
-    K: jax.Array, a: jax.Array, b: jax.Array, *, tol: float = 1e-6, max_iter: int = 1000
+    K: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tol: float = 1e-6,
+    max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> SinkhornResult:
     """Algorithm 1 — SINKHORNOT(K, a, b, tol)."""
     return generic_scaling_loop(
-        lambda v: K @ v, lambda u: K.T @ u, a, b, 1.0, tol=tol, max_iter=max_iter
+        lambda v: K @ v, lambda u: K.T @ u, a, b, 1.0,
+        tol=tol, max_iter=max_iter, trace=trace,
     )
 
 
-@partial(jax.jit, static_argnames=("tol", "max_iter"))
+@partial(jax.jit, static_argnames=("tol", "max_iter", "trace"))
 def sinkhorn_uot(
     K: jax.Array,
     a: jax.Array,
@@ -348,11 +408,13 @@ def sinkhorn_uot(
     *,
     tol: float = 1e-6,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> SinkhornResult:
     """Algorithm 2 — SINKHORNUOT(K, a, b, lam, eps, tol)."""
     fe = lam / (lam + eps)
     return generic_scaling_loop(
-        lambda v: K @ v, lambda u: K.T @ u, a, b, fe, tol=tol, max_iter=max_iter
+        lambda v: K @ v, lambda u: K.T @ u, a, b, fe,
+        tol=tol, max_iter=max_iter, trace=trace,
     )
 
 
@@ -370,7 +432,7 @@ def _dense_lse_col(logK: jax.Array, eps: float):
     return lse_col
 
 
-@partial(jax.jit, static_argnames=("eps", "tol", "max_iter"))
+@partial(jax.jit, static_argnames=("eps", "tol", "max_iter", "trace"))
 def sinkhorn_log(
     logK: jax.Array,
     a: jax.Array,
@@ -379,6 +441,7 @@ def sinkhorn_log(
     *,
     tol: float = 1e-9,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> SinkhornResult:
     """Log-domain Algorithm 1; returns potentials ``(f, g)``."""
     loga, logb = _masked_log(a), _masked_log(b)
@@ -391,10 +454,11 @@ def sinkhorn_log(
         1.0,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
 
 
-@partial(jax.jit, static_argnames=("lam", "eps", "tol", "max_iter"))
+@partial(jax.jit, static_argnames=("lam", "eps", "tol", "max_iter", "trace"))
 def sinkhorn_uot_log(
     logK: jax.Array,
     a: jax.Array,
@@ -404,6 +468,7 @@ def sinkhorn_uot_log(
     *,
     tol: float = 1e-9,
     max_iter: int = 1000,
+    trace: bool | int = False,
 ) -> SinkhornResult:
     """Log-domain Algorithm 2; returns potentials ``(f, g)``."""
     fe = lam / (lam + eps)
@@ -417,6 +482,7 @@ def sinkhorn_uot_log(
         fe,
         tol=tol,
         max_iter=max_iter,
+        trace=trace,
     )
 
 

@@ -190,6 +190,12 @@ class SparseKernelCOO(NamedTuple):
     # mat-vecs fall back to the unsorted scatter).
     csort: jax.Array | None = None  # (cap,) int32
     overflowed: jax.Array | None = None  # () bool — realized nnz exceeded cap
+    # draw accounting for `repro.obs.sketch_diagnostics` (None on hand-built
+    # sketches): proposals drawn by the sampler (Bernoulli keeps / Poisson
+    # total, *before* capacity truncation) and entries alive after
+    # evaluation+thinning but *before* duplicate merge
+    n_proposed: jax.Array | None = None  # () int32
+    n_accepted: jax.Array | None = None  # () int32
 
     @property
     def cap(self) -> int:
@@ -225,6 +231,8 @@ def sparsify_coo(
         m,
         csort=jnp.argsort(cols).astype(jnp.int32),
         overflowed=true_nnz > cap,
+        n_proposed=true_nnz,
+        n_accepted=jnp.minimum(true_nnz, cap),
     )
 
 
@@ -242,6 +250,9 @@ class LogSparseKernelCOO(NamedTuple):
     m: int
     csort: jax.Array | None = None  # (cap,) int32 col-sorted permutation
     overflowed: jax.Array | None = None  # () bool — realized nnz exceeded cap
+    # draw accounting for `repro.obs.sketch_diagnostics`; see SparseKernelCOO
+    n_proposed: jax.Array | None = None  # () int32
+    n_accepted: jax.Array | None = None  # () int32
 
     @property
     def cap(self) -> int:
@@ -299,6 +310,8 @@ def sparsify_coo_log(
         m,
         csort=jnp.argsort(cols).astype(jnp.int32),
         overflowed=true_nnz > cap,
+        n_proposed=true_nnz,
+        n_accepted=jnp.minimum(true_nnz, cap),
     )
     return sk, c_e
 
@@ -371,6 +384,7 @@ def sparsify_coo_mf(
         vals = jnp.where(alive, jnp.exp(logw), 0.0)
     else:
         vals = jnp.where(valid, k_e / jnp.maximum(rate, 1e-300), 0.0)
+    n_accepted = jnp.sum(vals != 0).astype(jnp.int32)  # pre-merge alive count
     # Merge duplicate draws (multiplicity >= 2 of one pair) so the sparse
     # objective's entry-wise entropy sees the summed plan mass, then compact
     # every zero slot (rejected proposals, blocked pairs, overflow, merged
@@ -397,6 +411,8 @@ def sparsify_coo_mf(
         m,
         csort=jnp.argsort(jnp.where(nz, cols, m - 1)).astype(jnp.int32),
         overflowed=total > cap,
+        n_proposed=total,
+        n_accepted=n_accepted,
     )
     return sk, c_e
 
@@ -449,6 +465,7 @@ def sparsify_coo_mf_log(
         )
         lograte = lograte + log_acc
     logvals = jnp.where(valid, -c_e / eps - lograte, -jnp.inf)
+    n_accepted = jnp.sum(~jnp.isneginf(logvals)).astype(jnp.int32)  # pre-merge
     # Merge duplicate draws by logsumexp of their weights, then compact all
     # dead slots (rejected proposals, blocked pairs, overflow, merged
     # copies) to the tail — same invariants as sparsify_coo_mf with
@@ -475,6 +492,8 @@ def sparsify_coo_mf_log(
         m,
         csort=jnp.argsort(jnp.where(nz, cols, m - 1)).astype(jnp.int32),
         overflowed=total > cap,
+        n_proposed=total,
+        n_accepted=n_accepted,
     )
     return sk, c_e
 

@@ -31,6 +31,7 @@ import numpy as np
 from repro.batch import BucketedExecutor
 from repro.core import Geometry, OTProblem, PointCloudGeometry, UOTProblem, s0, solve
 from repro.core.api.solution import Solution
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["OTRequest", "OTServer"]
 
@@ -54,6 +55,13 @@ class OTServer:
     batch-mates; a full ``max_batch`` dispatches immediately. Requests with
     different (method, options) never share a dispatch (options are part of
     the executor's compile key anyway).
+
+    Serving telemetry lands in ``metrics`` (default: the executor's
+    registry, so one ``repro.obs.export()`` covers both layers): counters
+    ``serve.requests`` / ``serve.batches``, the ``serve.queue_depth``
+    gauge, and histograms ``serve.batch_fill`` (dispatched size /
+    ``max_batch``) and ``serve.latency_seconds`` (submit-to-resolve per
+    request, the distribution behind ``stats()``'s p50/p95/p99).
     """
 
     def __init__(
@@ -62,15 +70,16 @@ class OTServer:
         *,
         max_batch: int = 16,
         deadline_s: float = 0.02,
+        metrics: MetricsRegistry | None = None,
     ):
         self.executor = executor or BucketedExecutor()
         self.max_batch = max_batch
         self.deadline_s = deadline_s
+        self.metrics = metrics if metrics is not None else self.executor.metrics
         self._queue: "queue.Queue[OTRequest | None]" = queue.Queue()
         self._thread: threading.Thread | None = None
         self.batches_dispatched = 0
         self.requests_served = 0
-        self._latencies: list[float] = []
 
     # ----------------------------------------------------------- lifecycle
 
@@ -108,6 +117,7 @@ class OTServer:
         """Enqueue one problem; resolves to its `Solution` after dispatch."""
         req = OTRequest(problem, method, key, opts)
         self._queue.put(req)
+        self.metrics.gauge("serve.queue_depth", float(self._queue.qsize()))
         return req.future
 
     # ------------------------------------------------------------ dispatch
@@ -119,6 +129,7 @@ class OTServer:
         server falls behind, batches fill instead of degenerating to size 1.
         Returns None on the stop sentinel."""
         first = self._queue.get()
+        self.metrics.gauge("serve.queue_depth", float(self._queue.qsize()))
         if first is None:
             return None
         batch = [first]
@@ -172,28 +183,42 @@ class OTServer:
                 r.future.set_exception(e)
             return
         now = time.perf_counter()
-        self.batches_dispatched += 1
-        self.requests_served += len(reqs)
+        # one locked block: the counters, the fill/latency histograms, and
+        # the legacy attributes move together, so a concurrent reset_stats()
+        # or stats() never sees a half-recorded dispatch
+        with self.metrics.locked():
+            self.batches_dispatched += 1
+            self.requests_served += len(reqs)
+            self.metrics.counter("serve.batches")
+            self.metrics.counter("serve.requests", float(len(reqs)))
+            self.metrics.observe("serve.batch_fill", len(reqs) / self.max_batch)
+            for r in reqs:
+                self.metrics.observe("serve.latency_seconds", now - r.t_submit)
         for r, sol in zip(reqs, sols):
-            self._latencies.append(now - r.t_submit)
             r.future.set_result(sol)
 
     # --------------------------------------------------------------- stats
 
     def reset_stats(self) -> None:
-        """Zero the serving counters (keeps the executor's compile cache)."""
-        self.batches_dispatched = 0
-        self.requests_served = 0
-        self._latencies.clear()
+        """Atomically zero the serving counters and latency/fill histograms
+        (keeps the executor's compile cache and ``executor.*`` metrics)."""
+        with self.metrics.locked():
+            self.batches_dispatched = 0
+            self.requests_served = 0
+            self.metrics.reset("serve.")
 
     def stats(self) -> dict:
-        lat = np.asarray(self._latencies) if self._latencies else np.zeros(1)
+        with self.metrics.locked():
+            lat = self.metrics.get_histogram("serve.latency_seconds")
+            requests = self.requests_served
+            batches = self.batches_dispatched
         return {
-            "requests": self.requests_served,
-            "batches": self.batches_dispatched,
-            "mean_batch": self.requests_served / max(self.batches_dispatched, 1),
-            "p50_latency_s": float(np.percentile(lat, 50)),
-            "p99_latency_s": float(np.percentile(lat, 99)),
+            "requests": requests,
+            "batches": batches,
+            "mean_batch": requests / max(batches, 1),
+            "p50_latency_s": lat["p50"],
+            "p95_latency_s": lat["p95"],
+            "p99_latency_s": lat["p99"],
             "compiles": self.executor.compile_count,
         }
 
@@ -278,6 +303,7 @@ def main() -> None:
           f"(mean occupancy {st['mean_batch']:.1f}, "
           f"{st['compiles']} compiles)")
     print(f"latency p50={st['p50_latency_s'] * 1e3:.0f}ms "
+          f"p95={st['p95_latency_s'] * 1e3:.0f}ms "
           f"p99={st['p99_latency_s'] * 1e3:.0f}ms; "
           f"sample values: {np.round(values[:4], 4).tolist()}")
 

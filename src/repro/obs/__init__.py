@@ -1,0 +1,52 @@
+"""repro.obs — observability: jit-safe solver traces + host-side metrics.
+
+Three layers (see ISSUE 7 / README "Observability"):
+
+* `trace`: fixed-size ring-buffer iteration telemetry carried through the
+  ``lax.while_loop`` solver cores (`SolverTrace`), sketch-quality stats
+  (`SketchStats`), and the per-solve `Diagnostics` record surfaced as
+  ``Solution.diagnostics``. Enable with ``solve(..., trace=True)``; the
+  ``trace=False`` default is zero-overhead (identical jaxprs, guarded by
+  tests).
+* `metrics`: a thread-safe `MetricsRegistry` (counters / gauges /
+  p50-p95-p99 histograms) instrumenting `BucketedExecutor` and
+  ``serve_ot``'s `OTServer`; `export` renders JSON events or
+  Prometheus text.
+* profiling: ``tools/profile_solve.py`` compiles any registered method and
+  reports XLA cost-analysis flops/bytes per iteration;
+  ``benchmarks/bench_serve.py`` turns the serving path into a sustained
+  requests/sec + tail-latency benchmark (``BENCH_serve.json``).
+"""
+from repro.obs.metrics import (
+    HISTOGRAM_WINDOW,
+    MetricsRegistry,
+    default_registry,
+    export,
+)
+from repro.obs.trace import (
+    DEFAULT_TRACE_LEN,
+    Diagnostics,
+    SketchStats,
+    SolverTrace,
+    empty_trace,
+    record_iteration,
+    resolve_trace_len,
+    sketch_diagnostics,
+    trim_trace,
+)
+
+__all__ = [
+    "DEFAULT_TRACE_LEN",
+    "Diagnostics",
+    "HISTOGRAM_WINDOW",
+    "MetricsRegistry",
+    "SketchStats",
+    "SolverTrace",
+    "default_registry",
+    "empty_trace",
+    "export",
+    "record_iteration",
+    "resolve_trace_len",
+    "sketch_diagnostics",
+    "trim_trace",
+]

@@ -1,0 +1,199 @@
+"""Host-side runtime metrics: counters, gauges, and quantile histograms.
+
+A `MetricsRegistry` is a thread-safe bag of named metrics used by the
+Python-level orchestration layers (`BucketedExecutor`, `OTServer`) — it
+never appears inside jitted code. Histograms keep a bounded window of raw
+observations (exact p50/p95/p99 over the last `HISTOGRAM_WINDOW` samples)
+plus running count/sum, so long-running servers don't grow unboundedly.
+
+Compound updates that must be atomic with respect to readers (e.g.
+``OTServer.reset_stats`` vs an in-flight dispatch recording latencies) run
+under ``registry.locked()`` — the registry lock is reentrant, so metric
+methods remain usable inside the block.
+
+`export` renders a snapshot either as structured JSON event rows
+(``fmt="json"``) or Prometheus text exposition (``fmt="prometheus"``,
+quantiles as ``{quantile="0.99"}`` labels). A module-level `default_registry`
+serves code that doesn't inject its own.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+from collections import deque
+from contextlib import contextmanager
+from typing import Iterator
+
+__all__ = [
+    "HISTOGRAM_WINDOW",
+    "MetricsRegistry",
+    "default_registry",
+    "export",
+]
+
+#: bounded per-histogram observation window for exact quantiles
+HISTOGRAM_WINDOW = 8192
+
+_QUANTILES = (0.5, 0.95, 0.99)
+
+
+def _quantile(sorted_vals: list[float], q: float) -> float:
+    """Linear-interpolated quantile of an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    pos = q * (len(sorted_vals) - 1)
+    lo = math.floor(pos)
+    hi = math.ceil(pos)
+    if lo == hi:
+        return sorted_vals[lo]
+    frac = pos - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+class _Histogram:
+    __slots__ = ("window", "count", "total")
+
+    def __init__(self) -> None:
+        self.window: deque[float] = deque(maxlen=HISTOGRAM_WINDOW)
+        self.count = 0
+        self.total = 0.0
+
+    def observe(self, value: float) -> None:
+        self.window.append(value)
+        self.count += 1
+        self.total += value
+
+    def snapshot(self) -> dict:
+        vals = sorted(self.window)
+        out = {
+            "count": self.count,
+            "sum": self.total,
+            "mean": self.total / self.count if self.count else 0.0,
+        }
+        for q in _QUANTILES:
+            out[f"p{int(q * 100)}"] = _quantile(vals, q)
+        return out
+
+
+class MetricsRegistry:
+    """Named counters, gauges, and windowed-quantile histograms.
+
+    All mutators and readers take the registry's reentrant lock, so single
+    calls are atomic; wrap multi-metric invariants in ``with locked():``.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._histograms: dict[str, _Histogram] = {}
+
+    # ------------------------------------------------------------- mutators
+
+    def counter(self, name: str, inc: float = 1.0) -> None:
+        """Increment a monotone counter (created at 0 on first use)."""
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + inc
+
+    def gauge(self, name: str, value: float) -> None:
+        """Set a point-in-time gauge."""
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        """Record one histogram observation."""
+        with self._lock:
+            hist = self._histograms.get(name)
+            if hist is None:
+                hist = self._histograms[name] = _Histogram()
+            hist.observe(float(value))
+
+    @contextmanager
+    def locked(self) -> Iterator["MetricsRegistry"]:
+        """Hold the registry lock across a compound update or read — e.g.
+        an atomic reset that must not interleave with an in-flight dispatch
+        recording into the same histograms."""
+        with self._lock:
+            yield self
+
+    def reset(self, prefix: str = "") -> None:
+        """Drop all metrics whose name starts with ``prefix`` ('' = all)."""
+        with self._lock:
+            for store in (self._counters, self._gauges, self._histograms):
+                for name in [n for n in store if n.startswith(prefix)]:
+                    del store[name]
+
+    # -------------------------------------------------------------- readers
+
+    def get_counter(self, name: str) -> float:
+        with self._lock:
+            return self._counters.get(name, 0.0)
+
+    def get_gauge(self, name: str) -> float:
+        with self._lock:
+            return self._gauges.get(name, 0.0)
+
+    def get_histogram(self, name: str) -> dict:
+        """Snapshot dict: count / sum / mean / p50 / p95 / p99 (zeros if
+        the histogram doesn't exist yet)."""
+        with self._lock:
+            hist = self._histograms.get(name)
+            return hist.snapshot() if hist else _Histogram().snapshot()
+
+    def snapshot(self) -> dict:
+        """Consistent point-in-time copy of every metric."""
+        with self._lock:
+            return {
+                "counters": dict(self._counters),
+                "gauges": dict(self._gauges),
+                "histograms": {
+                    n: h.snapshot() for n, h in self._histograms.items()
+                },
+            }
+
+
+#: shared registry used by instrumented components unless one is injected
+default_registry = MetricsRegistry()
+
+
+def _prom_name(name: str) -> str:
+    """Sanitize a metric name for Prometheus exposition (dots -> underscores)."""
+    return "".join(c if (c.isalnum() or c == "_") else "_" for c in name)
+
+
+def export(fmt: str = "json", registry: MetricsRegistry | None = None) -> str:
+    """Render a registry snapshot.
+
+    ``fmt="json"``: one structured event row per metric —
+    ``{"metric": name, "type": kind, ...values}`` — as a JSON array.
+    ``fmt="prometheus"``: text exposition; histograms become a summary-style
+    family with ``{quantile="..."}`` labels plus ``_count``/``_sum``.
+    """
+    reg = registry if registry is not None else default_registry
+    snap = reg.snapshot()
+    if fmt == "json":
+        rows = []
+        for name, v in sorted(snap["counters"].items()):
+            rows.append({"metric": name, "type": "counter", "value": v})
+        for name, v in sorted(snap["gauges"].items()):
+            rows.append({"metric": name, "type": "gauge", "value": v})
+        for name, h in sorted(snap["histograms"].items()):
+            rows.append({"metric": name, "type": "histogram", **h})
+        return json.dumps(rows, indent=2)
+    if fmt == "prometheus":
+        lines: list[str] = []
+        for name, v in sorted(snap["counters"].items()):
+            pn = _prom_name(name)
+            lines += [f"# TYPE {pn} counter", f"{pn} {v:g}"]
+        for name, v in sorted(snap["gauges"].items()):
+            pn = _prom_name(name)
+            lines += [f"# TYPE {pn} gauge", f"{pn} {v:g}"]
+        for name, h in sorted(snap["histograms"].items()):
+            pn = _prom_name(name)
+            lines.append(f"# TYPE {pn} summary")
+            for q in _QUANTILES:
+                lines.append(f'{pn}{{quantile="{q:g}"}} {h[f"p{int(q * 100)}"]:g}')
+            lines += [f"{pn}_count {h['count']}", f"{pn}_sum {h['sum']:g}"]
+        return "\n".join(lines) + "\n"
+    raise ValueError(f"unknown export format {fmt!r} (use 'json' or 'prometheus')")

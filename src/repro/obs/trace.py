@@ -1,0 +1,283 @@
+"""Jit-safe solver telemetry: fixed-size ring-buffer iteration traces.
+
+The Sinkhorn iteration loops run inside ``lax.while_loop``, so per-iteration
+observability has to be carried through the loop state as fixed-shape arrays.
+`SolverTrace` is that carry: a ring buffer of the last ``trace_len``
+iterations' stopping-rule error and marginal violation, plus a
+matvec-equivalent counter (the paper's cost unit — one kernel mat-vec or one
+segment-reduction sweep over the sketch; a full Sinkhorn iteration costs 2).
+
+Zero overhead when disabled is a hard contract: every loop takes a *static*
+``trace`` argument defaulting to ``False`` and only touches trace state
+inside ``if trace:`` blocks, so the ``trace=False`` jaxpr is equation-for-
+equation the untraced loop (guarded by jaxpr-equality tests against frozen
+pre-trace copies in ``tests/test_obs.py``).
+
+Host-side, `Diagnostics` (surfaced as ``Solution.diagnostics``) unrolls the
+ring into chronological order and carries the `SketchStats` of sketching
+solvers — realized nnz, fill, capacity overflow, importance-weight effective
+sample size, UOT acceptance rate, and duplicate-merge rate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DEFAULT_TRACE_LEN",
+    "Diagnostics",
+    "SketchStats",
+    "SolverTrace",
+    "empty_trace",
+    "record_iteration",
+    "resolve_trace_len",
+    "sketch_diagnostics",
+    "trim_trace",
+]
+
+#: ring-buffer length used when a loop is called with ``trace=True``
+#: (pass ``trace=<int>`` for a custom length)
+DEFAULT_TRACE_LEN = 256
+
+
+class SolverTrace(NamedTuple):
+    """Per-iteration telemetry carried through ``lax.while_loop``.
+
+    Iteration ``i`` writes ring slot ``i % trace_len``; with ``n_iter``
+    iterations total, the buffer holds the **last** ``min(n_iter,
+    trace_len)`` records (`trim_trace` unrolls them chronologically).
+    Batched loops carry ``(B, trace_len)`` buffers and a ``(B,)`` counter;
+    frozen (converged) elements stop writing, so each element's trace is
+    exactly its per-problem one.
+    """
+
+    err: jax.Array  # (..., L) stopping-rule error per iteration
+    marg: jax.Array  # (..., L) column-marginal violation per iteration
+    n_matvec: jax.Array  # (...,) int32 matvec-equivalent counter
+
+    @property
+    def trace_len(self) -> int:
+        return self.err.shape[-1]
+
+
+def resolve_trace_len(trace: bool | int) -> int:
+    """``trace=True`` -> `DEFAULT_TRACE_LEN`; an int is its own length."""
+    return DEFAULT_TRACE_LEN if trace is True else int(trace)
+
+
+def empty_trace(trace_len: int, dtype, batch: int | None = None) -> SolverTrace:
+    """Fresh ring buffers (NaN-filled: "not yet recorded" is distinguishable
+    from a genuine 0.0 error) + a zeroed matvec counter."""
+    shape = (trace_len,) if batch is None else (batch, trace_len)
+    head = () if batch is None else (batch,)
+    return SolverTrace(
+        jnp.full(shape, jnp.nan, dtype),
+        jnp.full(shape, jnp.nan, dtype),
+        jnp.zeros(head, jnp.int32),
+    )
+
+
+def record_iteration(
+    tr: SolverTrace,
+    t: jax.Array,
+    err: jax.Array,
+    marg: jax.Array,
+    *,
+    matvec_equivs: int = 2,
+    active: jax.Array | None = None,
+) -> SolverTrace:
+    """Write iteration ``t``'s record at ring slot ``t % trace_len``.
+
+    ``t`` is the pre-increment iteration index (the loops record before
+    bumping ``t``), so slots fill from 0. Batched form: ``t``/``err``/
+    ``marg``/``active`` are (B,); inactive (frozen) elements rewrite their
+    old value in place — a no-op — and don't advance their counter.
+    """
+    L = tr.trace_len
+    idx = t % L
+    if tr.err.ndim == 1:
+        return SolverTrace(
+            tr.err.at[idx].set(err),
+            tr.marg.at[idx].set(marg),
+            tr.n_matvec + jnp.int32(matvec_equivs),
+        )
+    rows = jnp.arange(tr.err.shape[0])
+    err_w = jnp.where(active, err, tr.err[rows, idx])
+    marg_w = jnp.where(active, marg, tr.marg[rows, idx])
+    return SolverTrace(
+        tr.err.at[rows, idx].set(err_w),
+        tr.marg.at[rows, idx].set(marg_w),
+        tr.n_matvec + jnp.where(active, matvec_equivs, 0).astype(jnp.int32),
+    )
+
+
+def trim_trace(tr: SolverTrace, n_iter) -> tuple[np.ndarray, np.ndarray, int]:
+    """Unroll one element's ring buffer into chronological order (host-side).
+
+    Returns ``(errs, margs, first_iteration)``: the last ``min(n_iter, L)``
+    per-iteration records, oldest first, and the global iteration index of
+    the first returned record (0 unless the ring wrapped).
+    """
+    if tr.err.ndim != 1:
+        raise ValueError("trim_trace takes one element's trace; index the batch first")
+    k = int(n_iter)
+    L = tr.trace_len
+    err = np.asarray(tr.err)
+    marg = np.asarray(tr.marg)
+    if k <= L:
+        return err[:k], marg[:k], 0
+    h = k % L
+    return (
+        np.concatenate([err[h:], err[:h]]),
+        np.concatenate([marg[h:], marg[:h]]),
+        k - L,
+    )
+
+
+# --------------------------------------------------------------------------
+# Sketch diagnostics
+# --------------------------------------------------------------------------
+
+
+class SketchStats(NamedTuple):
+    """Quality report of one importance sketch (`SparseKernelCOO` /
+    `LogSparseKernelCOO`), computed in O(cap) by `sketch_diagnostics`."""
+
+    nnz: jax.Array  # () int32 realized distinct entries
+    cap: int  # static COO capacity
+    fill: jax.Array  # () nnz / cap
+    overflowed: jax.Array | None  # () bool — draw exceeded cap (None if unknown)
+    ess: jax.Array  # () effective sample size of the importance weights
+    ess_ratio: jax.Array  # () ess / nnz  (1.0 = perfectly balanced weights)
+    #: fraction of *evaluated* proposals that survived thinning — the UOT
+    #: acceptance rate of the matrix-free sampler (1.0 on Bernoulli draws;
+    #: None when the builder didn't record draw counts)
+    acceptance_rate: jax.Array | None
+    #: fraction of accepted draws that did not survive as distinct entries
+    #: (duplicate-merge collapses on the Poissonized sampler, capacity
+    #: truncation on Bernoulli draws; None when unknown)
+    dup_merge_rate: jax.Array | None
+
+
+def _weight_ess(sk) -> jax.Array:
+    """``(sum w)^2 / sum w^2`` over alive entries; log-space sketches compute
+    it as ``exp(2 lse(logv) - lse(2 logv))`` so small-eps weights don't
+    flush to zero first."""
+    logvals = getattr(sk, "logvals", None)
+    if logvals is not None:
+        lse1 = jax.scipy.special.logsumexp(logvals)
+        lse2 = jax.scipy.special.logsumexp(2.0 * logvals)
+        return jnp.where(jnp.isneginf(lse1), 0.0, jnp.exp(2.0 * lse1 - lse2))
+    w = sk.vals
+    tot = jnp.sum(w)
+    sq = jnp.sum(w * w)
+    return jnp.where(sq > 0, tot * tot / jnp.where(sq > 0, sq, 1.0), 0.0)
+
+
+def sketch_diagnostics(sk) -> SketchStats:
+    """O(cap) `SketchStats` for a COO sketch (scaling- or log-domain).
+
+    ``acceptance_rate`` / ``dup_merge_rate`` need the builder-recorded draw
+    counts (``n_proposed`` / ``n_accepted`` on the sketch); hand-built
+    sketches without them report ``None`` for both.
+    """
+    nnz = sk.nnz
+    cap = sk.cap
+    fill = nnz.astype(jnp.float32) / float(cap)
+    ess = _weight_ess(sk)
+    ess_ratio = jnp.where(nnz > 0, ess / jnp.maximum(nnz, 1), 0.0)
+    n_prop = getattr(sk, "n_proposed", None)
+    n_acc = getattr(sk, "n_accepted", None)
+    acceptance = None
+    merge = None
+    if n_prop is not None and n_acc is not None:
+        evaluated = jnp.minimum(n_prop, cap)  # proposals past cap never drawn
+        acceptance = jnp.where(
+            evaluated > 0, n_acc / jnp.maximum(evaluated, 1), 1.0
+        ).astype(jnp.float32)
+        merge = jnp.where(
+            n_acc > 0, 1.0 - nnz / jnp.maximum(n_acc, 1), 0.0
+        ).astype(jnp.float32)
+    return SketchStats(
+        nnz=nnz,
+        cap=cap,
+        fill=fill,
+        overflowed=sk.overflowed,
+        ess=ess,
+        ess_ratio=ess_ratio,
+        acceptance_rate=acceptance,
+        dup_merge_rate=merge,
+    )
+
+
+# --------------------------------------------------------------------------
+# The Solution-level diagnostics record
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Diagnostics:
+    """Per-solve observability record (``Solution.diagnostics``).
+
+    ``trace`` is the raw device ring buffer (None when the solve ran with
+    ``trace=False``); the accessors below sync to host and unroll it.
+    ``sketch`` is the `SketchStats` of sketching solvers (None otherwise).
+    """
+
+    trace: SolverTrace | None
+    n_iter: jax.Array
+    status: jax.Array | None = None
+    sketch: SketchStats | None = None
+
+    @property
+    def n_matvec(self) -> int:
+        """Total matvec-equivalents spent (0 when untraced)."""
+        return 0 if self.trace is None else int(self.trace.n_matvec)
+
+    @property
+    def first_traced_iteration(self) -> int:
+        """Global index of the first retained record (ring may have wrapped)."""
+        if self.trace is None:
+            return 0
+        return max(0, int(self.n_iter) - self.trace.trace_len)
+
+    def iteration_errors(self) -> np.ndarray:
+        """Chronological per-iteration stopping-rule errors (last L kept)."""
+        if self.trace is None:
+            return np.empty((0,))
+        return trim_trace(self.trace, self.n_iter)[0]
+
+    def marginal_errors(self) -> np.ndarray:
+        """Chronological per-iteration column-marginal violations."""
+        if self.trace is None:
+            return np.empty((0,))
+        return trim_trace(self.trace, self.n_iter)[1]
+
+    def summary(self) -> dict:
+        """Small host-side dict (JSON-friendly) for logging/metrics export."""
+        out: dict = {"n_iter": int(self.n_iter), "n_matvec": self.n_matvec}
+        if self.status is not None:
+            out["status"] = int(self.status)
+        errs = self.iteration_errors()
+        if errs.size:
+            out["final_err"] = float(errs[-1])
+            out["first_traced_iteration"] = self.first_traced_iteration
+        if self.sketch is not None:
+            out["sketch"] = {
+                "nnz": int(self.sketch.nnz),
+                "cap": int(self.sketch.cap),
+                "fill": float(self.sketch.fill),
+                "ess": float(self.sketch.ess),
+                "ess_ratio": float(self.sketch.ess_ratio),
+            }
+            if self.sketch.overflowed is not None:
+                out["sketch"]["overflowed"] = bool(self.sketch.overflowed)
+            if self.sketch.acceptance_rate is not None:
+                out["sketch"]["acceptance_rate"] = float(self.sketch.acceptance_rate)
+            if self.sketch.dup_merge_rate is not None:
+                out["sketch"]["dup_merge_rate"] = float(self.sketch.dup_merge_rate)
+        return out

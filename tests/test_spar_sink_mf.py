@@ -319,6 +319,33 @@ def test_mf_solve_never_allocates_n_squared():
     assert biggest < 100 * n, biggest  # O(n + cap); n*m would be 1.7e10
 
 
+def test_mf_traced_solve_never_allocates_n_squared():
+    """Telemetry keeps the Õ(n) guarantee: the trace=True matrix-free
+    pipeline at n = 2^17 adds only the O(trace_len) ring buffer, never an
+    (n, m) intermediate."""
+    n = 2 ** 17
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n)))
+    problem = OTProblem(PointCloudGeometry(x), a, b, EPS)
+    s = 100_000.0
+    cap = default_cap(s)
+
+    def mf_traced_core(key):
+        sk, c_e = build_mf_sketch(problem, key, s, cap=cap)
+        res = generic_scaling_loop(
+            lambda v: sparsify.coo_matvec(sk, v),
+            lambda u: sparsify.coo_rmatvec(sk, u),
+            a, b, 1.0, tol=1e-3, max_iter=20, trace=True,
+        )
+        return res.u, res.v, res.trace, coo_objective_ot_entries(sk, c_e, res, EPS)
+
+    jaxpr = jax.make_jaxpr(mf_traced_core)(jax.random.PRNGKey(0))
+    biggest = _max_aval_elems(jaxpr)
+    assert biggest < 100 * n, biggest  # O(n + cap + trace_len)
+
+
 def test_mf_stabilized_log_solve_never_allocates_n_squared():
     """Acceptance: the log-domain matrix-free path (spar_sink_mf with
     stabilize=True) keeps the Õ(n) guarantee — trace sketch + potential

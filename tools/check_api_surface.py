@@ -1,7 +1,8 @@
 """Guard the redesigned public API surface against silent drift.
 
 Asserts that each guarded module's ``__all__`` (``repro.core``,
-``repro.core.api``, ``repro.batch``, ``repro.kernels``) exactly matches
+``repro.core.api``, ``repro.batch``, ``repro.kernels``, ``repro.obs``)
+exactly matches
 the actually-exported public names: every declared name must resolve,
 every resolvable public name must be declared, no duplicates, and the
 list must stay sorted. Also pins the solver-registry surface — the
@@ -18,7 +19,8 @@ import importlib
 import sys
 import types
 
-MODULES = ("repro.core", "repro.core.api", "repro.batch", "repro.kernels")
+MODULES = ("repro.core", "repro.core.api", "repro.batch", "repro.kernels",
+           "repro.obs")
 
 # the registered method surface (sorted); update deliberately when adding
 # a solver, together with the registry-table docstring and the README

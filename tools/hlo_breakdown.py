@@ -1,41 +1,98 @@
-"""Op-level breakdown of a dry-run cell's compiled HLO: bytes by op kind.
+"""Op-level breakdown of a compiled program's HLO: bytes by op kind.
 
 PYTHONPATH=src python tools/hlo_breakdown.py --arch olmoe_1b_7b --shape train_4k
+
+The parsing helpers (`shape_bytes`, `op_breakdown`) are plain text -> dict
+functions importable without pulling in jax or the model configs —
+`tools/profile_solve.py` reuses them on OT solver HLO. Only `main()` builds
+the dry-run cell (and only it mutates ``XLA_FLAGS``).
 """
-import os
-
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
-).strip()
-
 import argparse
 import re
 from collections import defaultdict
 
-import jax
-
-from repro.configs import base as cfg_base
-from repro.launch import specs as specs_lib
-from repro.launch.dryrun import _DTYPE_BYTES, _layer_reduced, make_production_mesh
-
 SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[^\]]*\])[^ ]*)\s+([a-z\-]+)[.\d]*\(")
 
+#: HLO dtype tag -> bytes (mirrors repro.launch.dryrun._DTYPE_BYTES; kept
+#: local so the parsing helpers import without jax / the configs package)
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
 
-def shape_bytes(text):
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(text: str) -> int:
+    """Total bytes of every ``dtype[dims]`` shape literal in ``text``."""
     total = 0
     for dt, dims in SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
+        if dt not in DTYPE_BYTES:
             continue
         n = 1
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        total += n * DTYPE_BYTES[dt]
     return total
 
 
+def op_breakdown(hlo_text: str, collective_floor: int = 1 << 22):
+    """Parse HLO text into ``(by_kind, collectives)``.
+
+    ``by_kind`` maps op kind -> ``[result_bytes, op_count]``;
+    ``collectives`` lists ``(bytes, line)`` for collective ops whose result
+    exceeds ``collective_floor`` bytes.
+    """
+    by_kind: dict[str, list[int]] = defaultdict(lambda: [0, 0])
+    coll_lines: list[tuple[int, str]] = []
+    for line in hlo_text.splitlines():
+        mo = OP_RE.match(line)
+        if not mo:
+            continue
+        shp, op = mo.groups()
+        b = shape_bytes(shp)
+        by_kind[op][0] += b
+        by_kind[op][1] += 1
+        if op in _COLLECTIVES and b > collective_floor:
+            coll_lines.append((b, line.strip()[:180]))
+    return by_kind, coll_lines
+
+
+def print_breakdown(hlo_text: str, top: int = 14) -> None:
+    """Human-readable summary of `op_breakdown` on one HLO module."""
+    by_kind, coll_lines = op_breakdown(hlo_text)
+    rows = sorted(by_kind.items(), key=lambda kv: -kv[1][0])[:top]
+    total = sum(v[0] for v in by_kind.values())
+    n_ops = sum(v[1] for v in by_kind.values())
+    print(f"total result-bytes {total/1e9:.1f} GB across {n_ops} ops")
+    for op, (b, c) in rows:
+        print(f"  {op:<28s} {b/1e9:10.2f} GB  x{c}")
+    if coll_lines:
+        print("\nlargest collectives:")
+        for b, line in sorted(coll_lines, reverse=True)[:10]:
+            print(f"  {b/1e9:8.2f} GB  {line}")
+
+
 def main():
+    # The dry-run cell wants a large host-device mesh; set it up before jax
+    # initializes (which is why none of the heavy imports are module-level).
+    import os
+
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    ).strip()
+
+    import jax
+
+    from repro.configs import base as cfg_base
+    from repro.launch import specs as specs_lib
+    from repro.launch.dryrun import _layer_reduced, make_production_mesh
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
@@ -61,27 +118,7 @@ def main():
             jt = jax.jit(step, in_shardings=sh, donate_argnums=d)
         compiled = jt.lower(*a).compile()
 
-    by_kind = defaultdict(lambda: [0, 0])
-    coll_lines = []
-    for line in compiled.as_text().splitlines():
-        mo = OP_RE.match(line)
-        if not mo:
-            continue
-        shp, op = mo.groups()
-        b = shape_bytes(shp)
-        by_kind[op][0] += b
-        by_kind[op][1] += 1
-        if op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                  "collective-permute") and b > 1 << 22:
-            coll_lines.append((b, line.strip()[:180]))
-    rows = sorted(by_kind.items(), key=lambda kv: -kv[1][0])[: args.top]
-    total = sum(v[0] for v in by_kind.values())
-    print(f"total result-bytes {total/1e9:.1f} GB across {sum(v[1] for v in by_kind.values())} ops")
-    for op, (b, c) in rows:
-        print(f"  {op:<28s} {b/1e9:10.2f} GB  x{c}")
-    print("\nlargest collectives:")
-    for b, line in sorted(coll_lines, reverse=True)[:10]:
-        print(f"  {b/1e9:8.2f} GB  {line}")
+    print_breakdown(compiled.as_text(), top=args.top)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,244 @@
+"""Compile-and-profile one registered OT solver on a synthetic problem.
+
+PYTHONPATH=src python tools/profile_solve.py --method spar_sink_coo --n 512
+
+For the chosen method this tool:
+
+* lowers the solver's iteration to XLA and compiles it (``.lower().compile()``),
+  reporting compile wall time;
+* prints the XLA cost analysis (estimated flops / bytes accessed), both raw
+  and normalized per executed Sinkhorn iteration (the while-loop body is
+  counted once by the cost model, so raw numbers are per-iteration already —
+  the normalized row divides the *measured* run time instead);
+* prints the HLO op-kind byte breakdown (reusing `tools/hlo_breakdown`);
+* times a traced (``trace=True``) solve through the public ``solve()`` API
+  and prints the `repro.obs.Diagnostics` summary.
+
+``--profile-dir DIR`` additionally wraps the timed run in
+``jax.profiler.trace`` (open DIR with TensorBoard / Perfetto).
+``--smoke`` runs the telemetry smoke check used by CI: asserts the
+diagnostics are populated, the matvec counter is consistent
+(``n_matvec == 2 * n_iter``) and the trace ring holds the executed tail.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from hlo_breakdown import print_breakdown  # noqa: E402 — sibling tools module
+
+PROFILABLE = ("dense", "log", "spar_sink_coo", "rand_sink", "spar_sink_log",
+              "spar_sink_mf")
+
+
+def make_problem(n: int, eps: float, seed: int, point_cloud: bool):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import Geometry, OTProblem, PointCloudGeometry
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(n, 3)))
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n)))
+    geom = PointCloudGeometry(x) if point_cloud else Geometry.from_points(
+        x, normalize=True
+    )
+    return OTProblem(geom, a, b, eps)
+
+
+def lower_solver(method: str, problem, key, s: float, tol: float,
+                 max_iter: int, trace):
+    """Lower the method's iteration (sketch prebuilt, arrays as arguments)."""
+    import jax
+
+    from repro.core import sparsify
+    from repro.core.api import solvers as api_solvers
+    from repro.core.sinkhorn import (
+        _masked_log,
+        generic_scaling_loop,
+        sinkhorn,
+        sinkhorn_log,
+    )
+
+    a, b = problem.a, problem.b
+    if method == "dense":
+        return sinkhorn.lower(
+            problem.kernel(), a, b, tol=tol, max_iter=max_iter, trace=trace
+        )
+    if method == "log":
+        return sinkhorn_log.lower(
+            problem.log_kernel(), a, b, float(problem.eps),
+            tol=tol, max_iter=max_iter, trace=trace,
+        )
+    if method in ("spar_sink_coo", "rand_sink", "spar_sink_mf"):
+        if method == "spar_sink_mf":
+            sk, _ = api_solvers.build_mf_sketch(problem, key, s)
+        else:
+            probs = (
+                sparsify.uniform_prob_factors(*problem.shape, problem.geom.dtype)
+                if method == "rand_sink" else None
+            )
+            sk = api_solvers.build_coo_sketch(problem, key, s, probs=probs)
+
+        def run(vals, a, b):
+            k = sk._replace(vals=vals)
+            return generic_scaling_loop(
+                lambda v: sparsify.coo_matvec(k, v),
+                lambda u: sparsify.coo_rmatvec(k, u),
+                a, b, problem.fe, tol=tol, max_iter=max_iter, trace=trace,
+            )
+
+        return jax.jit(run).lower(sk.vals, a, b)
+    if method == "spar_sink_log":
+        from repro.batch.solvers import sparse_log_potentials
+
+        sk, _ = api_solvers.build_coo_log_sketch(problem, key, s)
+        n, m = problem.shape
+        csort = sk.csort[None] if sk.csort is not None else None
+
+        def run(rows, cols, logvals, csort, loga, logb, eps, fe):
+            return sparse_log_potentials(
+                rows, cols, logvals, csort, loga, logb, eps, fe,
+                n=n, m=m, tol=tol, max_iter=max_iter, trace=trace,
+            )
+
+        return jax.jit(run).lower(
+            sk.rows[None], sk.cols[None], sk.logvals[None], csort,
+            _masked_log(a)[None], _masked_log(b)[None],
+            jax.numpy.asarray([float(problem.eps)], a.dtype),
+            jax.numpy.asarray([problem.fe], a.dtype),
+        )
+    raise SystemExit(f"unknown method {method!r}; choose from {PROFILABLE}")
+
+
+def _cost_rows(compiled) -> dict:
+    """Flatten ``compiled.cost_analysis()`` across jax-version shapes."""
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:  # noqa: BLE001 — backend may not implement it
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
+def traced_solve(method: str, problem, key, s: float, tol: float,
+                 max_iter: int):
+    from repro.core import solve
+
+    kw: dict = dict(tol=tol, max_iter=max_iter, trace=True)
+    if method not in ("dense", "log"):
+        kw.update(key=key, s=s)
+    t0 = time.perf_counter()
+    sol = solve(problem, method=method, **kw).block_until_ready()
+    return sol, time.perf_counter() - t0
+
+
+def smoke(method: str, problem, key, s: float, tol: float, max_iter: int):
+    """CI telemetry check: diagnostics populated + matvec counter consistent."""
+    from repro.obs.trace import trim_trace
+
+    sol, _ = traced_solve(method, problem, key, s, tol, max_iter)
+    d = sol.diagnostics
+    assert d is not None, "trace=True solve returned no diagnostics"
+    n_iter = int(d.n_iter)
+    assert n_iter > 0, "solver did no iterations"
+    assert int(d.n_matvec) == 2 * n_iter, (
+        f"matvec counter {int(d.n_matvec)} != 2 * n_iter {n_iter}"
+    )
+    errs, _, first = trim_trace(d.trace, n_iter)
+    assert len(errs) == min(n_iter, d.trace.trace_len), "trace ring mis-sized"
+    assert first + len(errs) == n_iter, "trace ring not the executed tail"
+    assert all(e == e for e in errs), "NaN in traced errors"
+    print(f"telemetry smoke OK: {method} n_iter={n_iter} "
+          f"n_matvec={int(d.n_matvec)} traced={len(errs)} "
+          f"final_err={errs[-1]:.3e}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--method", default="spar_sink_coo", choices=PROFILABLE)
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--eps", type=float, default=0.05)
+    ap.add_argument("--s-mult", type=float, default=8.0,
+                    help="sketch budget multiplier on s0(n)")
+    ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--max-iter", type=int, default=2000)
+    ap.add_argument("--trace-len", type=int, default=0,
+                    help="trace ring length baked into the lowered program "
+                         "(0 = lower the untraced fast path)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--top", type=int, default=10,
+                    help="HLO op kinds to show in the byte breakdown")
+    ap.add_argument("--profile-dir", default=None,
+                    help="write a jax.profiler trace of the timed solve here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI telemetry smoke check and exit")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.core import s0
+
+    problem = make_problem(
+        args.n, args.eps, args.seed, point_cloud=args.method == "spar_sink_mf"
+    )
+    key = jax.random.PRNGKey(args.seed)
+    s = args.s_mult * s0(args.n)
+
+    if args.smoke:
+        smoke(args.method, problem, key, s, args.tol, args.max_iter)
+        return
+
+    trace = args.trace_len if args.trace_len else False
+    t0 = time.perf_counter()
+    lowered = lower_solver(
+        args.method, problem, key, s, args.tol, args.max_iter, trace
+    )
+    compiled = lowered.compile()
+    print(f"[{args.method}] n={args.n} eps={args.eps} "
+          f"trace={'off' if not trace else trace}: "
+          f"compiled in {time.perf_counter() - t0:.2f}s "
+          f"on backend={jax.default_backend()}")
+
+    cost = _cost_rows(compiled)
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    if cost:
+        print(f"XLA cost analysis (while-loop body counted once, i.e. "
+              f"~per iteration): flops={flops:.3e} bytes={bytes_acc:.3e}")
+    else:
+        print("XLA cost analysis unavailable on this backend")
+
+    print()
+    print_breakdown(compiled.as_text(), top=args.top)
+
+    def timed():
+        return traced_solve(
+            args.method, problem, key, s, args.tol, args.max_iter
+        )
+
+    timed()  # warm the public-API compile cache
+    if args.profile_dir:
+        with jax.profiler.trace(args.profile_dir):
+            sol, dt = timed()
+        print(f"\nprofiler trace written to {args.profile_dir}")
+    else:
+        sol, dt = timed()
+    d = sol.diagnostics
+    n_iter = max(int(d.n_iter), 1)
+    print(f"\ntraced solve: {dt * 1e3:.1f} ms total, {n_iter} iterations "
+          f"({dt / n_iter * 1e6:.1f} us/iter measured)")
+    if flops:
+        print(f"model estimate per iteration: {flops:.3e} flops, "
+              f"{bytes_acc:.3e} bytes "
+              f"(arithmetic intensity {flops / max(bytes_acc, 1.0):.2f})")
+    print(f"diagnostics: {d.summary()}")
+
+
+if __name__ == "__main__":
+    main()
