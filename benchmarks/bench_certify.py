@@ -1,0 +1,103 @@
+"""Certified-bound tightness: `Certificate.error_bound` vs true error.
+
+Sweeps eps x sketch budget (coverage fraction of n^2) on separated point
+clouds, OT and UOT, solving with ``spar_sink_log`` + ``certify=True`` and
+comparing the a posteriori ``error_bound`` against the *true* objective
+error vs a dense log-domain oracle. Per config we record:
+
+* ``true_err``   — mean |value - oracle| over reps
+* ``bound``      — mean certified ``error_bound``
+* ``tightness``  — mean bound / true_err (1.0 = exact, >= 1 = valid)
+* ``valid_frac`` — fraction of reps with bound >= true error
+* ``certify_overhead_s`` — extra wall time of ``certify=True`` vs False
+
+Wired into ``benchmarks.run --emit-json`` as ``BENCH_certify.json``
+(repro-bench-v1 schema); ``--smoke`` runs one tiny config for CI.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.bench_rmae_vs_eps import _separated
+from benchmarks.common import emit, log, record, rmae, timed
+from repro.core import Geometry, OTProblem, UOTProblem, solve
+
+
+def run(eps_grid=(1e-1, 1e-2, 1e-3), fracs=(0.25, 0.5), n=256, d=4,
+        n_rep=3, max_iter=20_000, lam=None):
+    """One sweep; ``lam`` switches to the UOT objective (masses 5 and 3)."""
+    x, y, a, b = _separated(n, d)
+    geom = Geometry.from_points(x, y)
+    kind = "uot" if lam is not None else "ot"
+    rows = []
+    for eps in eps_grid:
+        if lam is not None:
+            problem = UOTProblem(geom, a * 5.0, b * 3.0, eps, lam=lam)
+        else:
+            problem = OTProblem(geom, a, b, eps)
+        oracle = solve(problem, method="log", tol=1e-10, max_iter=100_000)
+        truth = float(oracle.value)
+        for frac in fracs:
+            s = float(frac * n * n)
+            vals, errs, bounds, t_cert, t_plain = [], [], [], 0.0, 0.0
+            for i in range(n_rep):
+                key = jax.random.PRNGKey(i)
+                sol, dt = timed(solve, problem, method="spar_sink_log",
+                                key=key, s=s, tol=1e-9, max_iter=max_iter,
+                                certify=True)
+                _, dt0 = timed(solve, problem, method="spar_sink_log",
+                               key=key, s=s, tol=1e-9, max_iter=max_iter)
+                t_cert += dt
+                t_plain += dt0
+                vals.append(float(sol.value))
+                errs.append(abs(float(sol.value) - truth))
+                bounds.append(float(sol.certificate.error_bound))
+            errs_ = np.asarray(errs)
+            bounds_ = np.asarray(bounds)
+            tight = float(np.mean(bounds_ / np.maximum(errs_, 1e-15)))
+            valid = float(np.mean(bounds_ >= errs_))
+            name = f"certify/{kind}/spar_sink_log/eps{eps:g}/frac{frac:g}"
+            rows.append((kind, eps, frac, float(errs_.mean()),
+                         float(bounds_.mean()), tight, valid))
+            emit(name, t_cert / n_rep * 1e6,
+                 f"tightness={tight:.2f};valid={valid:.2f}")
+            record(name, method="spar_sink_log", n=n,
+                   wall_time_s=t_cert / n_rep, rmae=rmae(vals, truth),
+                   eps=eps, frac=frac, true_err=float(errs_.mean()),
+                   bound=float(bounds_.mean()), tightness=tight,
+                   valid_frac=valid,
+                   certify_overhead_s=max(t_cert - t_plain, 0.0) / n_rep)
+    for kind_, eps, frac, te, bd, tight, valid in rows:
+        log(f"certify {kind_} eps={eps:g} frac={frac:g}: "
+            f"true_err={te:.4f} bound={bd:.4f} "
+            f"tightness={tight:.2f} valid={valid:.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny config for CI (asserts the bound is "
+                         "finite, nonnegative, and valid)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(eps_grid=(1e-1,), fracs=(0.5,), n=128, n_rep=2,
+                   max_iter=5000)
+        _, _, _, te, bd, tight, valid = rows[0]
+        assert np.isfinite(bd) and bd >= 0.0, rows
+        assert valid == 1.0, rows
+        log("smoke OK")
+    elif args.full:
+        run(n=1024, n_rep=5)
+        run(n=1024, n_rep=5, lam=1.0)
+    else:
+        run()
+        run(lam=1.0)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,10 +5,12 @@ Full-size variants: ``python -m benchmarks.bench_<x> --full``.
 
 ``--emit-json [DIR]`` runs the machine-readable perf suites (batched
 dispatch + time-vs-n + matrix-free scaling + RMAE-vs-eps + sustained
-serving throughput) and writes standardized ``BENCH_batch.json`` /
-``BENCH_time.json`` / ``BENCH_scale.json`` / ``BENCH_eps.json`` /
-``BENCH_serve.json`` (schema ``repro-bench-v1``: method, n, B, wall-time,
-RMAE per row) so the perf trajectory stays comparable across PRs.
+serving throughput + certificate tightness) and writes standardized
+``BENCH_batch.json`` / ``BENCH_time.json`` / ``BENCH_scale.json`` /
+``BENCH_eps.json`` / ``BENCH_serve.json`` / ``BENCH_certify.json``
+(schema ``repro-bench-v1``: method, n, B, wall-time, RMAE per row) so the
+perf trajectory stays comparable across PRs — and gate-able by
+``tools/bench_gate.py``.
 """
 from __future__ import annotations
 
@@ -21,6 +23,7 @@ import time
 def _emit_json(out_dir: str) -> None:
     from benchmarks import (
         bench_batch,
+        bench_certify,
         bench_rmae_vs_eps,
         bench_scale,
         bench_serve,
@@ -45,6 +48,10 @@ def _emit_json(out_dir: str) -> None:
     print("--- sustained serving throughput (JSON) ---", file=sys.stderr)
     bench_serve.run()
     common.write_json(os.path.join(out_dir, "BENCH_serve.json"), "serve")
+    print("--- certificate tightness sweep (JSON) ---", file=sys.stderr)
+    bench_certify.run(n_rep=2)
+    bench_certify.run(n_rep=2, lam=1.0)
+    common.write_json(os.path.join(out_dir, "BENCH_certify.json"), "certify")
 
 
 def main() -> None:

@@ -269,6 +269,12 @@ class BucketedExecutor:
         res = SinkhornResult(
             br.u[j, :n], br.v[j, :m], br.n_iter[j], br.err[j], status, tr
         )
+        bcert = getattr(br, "certificate", None)
+        cert = (
+            jax.tree_util.tree_map(lambda x: x[j], bcert)
+            if bcert is not None
+            else None
+        )
         if br.rows is not None:
             rows, cols, vals, nnz = br.rows[j], br.cols[j], br.vals[j], br.nnz[j]
 
@@ -303,6 +309,7 @@ class BucketedExecutor:
                 overflowed=(
                     br.overflowed[j] if br.overflowed is not None else None
                 ),
+                certificate=cert,
                 _plan_thunk=sparse_plan,
             )
         if method in _LOG_DOMAIN:
@@ -321,5 +328,6 @@ class BucketedExecutor:
             value=br.value[j],
             result=res,
             domain=domain,
+            certificate=cert,
             _plan_thunk=thunk,
         )

@@ -51,6 +51,12 @@ from repro.core.sinkhorn import (
     uot_cost_from_plan,
 )
 from repro.core.spar_sink import default_cap
+from repro.obs.certify import (
+    Certificate,
+    dense_certificate,
+    importance_ess,
+    sparse_certificate,
+)
 from repro.obs.trace import (
     SolverTrace,
     empty_trace,
@@ -118,6 +124,9 @@ class BatchedResult(NamedTuple):
     #: batched per-iteration ring-buffer telemetry ((B, L) buffers + (B,)
     #: matvec counter); ``None`` unless the solve ran with ``trace=True``
     trace: SolverTrace | None = None
+    #: batched quality certificate ((B,) fields, sliced per element by the
+    #: executor); ``None`` unless the solve ran with ``certify=True``
+    certificate: Certificate | None = None
 
 
 # --------------------------------------------------------------------------
@@ -424,6 +433,66 @@ def _batched_value_from_plan(bp: BatchedProblem, T: jax.Array) -> jax.Array:
     return jnp.where(bp.is_balanced, v_ot, v_uot)
 
 
+def _batched_lam(bp: BatchedProblem) -> jax.Array:
+    """Per-element marginal penalty with balanced elements pinned to ``inf``
+    (selects the balanced dual branch inside the certificate math)."""
+    return jnp.where(bp.is_balanced, jnp.inf, bp.lam)
+
+
+def _batched_potentials(u: jax.Array, v: jax.Array, eps: jax.Array):
+    """Batched ``(f, g) = eps log(u, v)`` with dead atoms at ``-inf``."""
+    eps_col = eps[:, None]
+    f = jnp.where(u > 0, eps_col * jnp.log(jnp.where(u > 0, u, 1.0)), -jnp.inf)
+    g = jnp.where(v > 0, eps_col * jnp.log(jnp.where(v > 0, v, 1.0)), -jnp.inf)
+    return f, g
+
+
+def _batched_dense_cert(
+    bp: BatchedProblem, T: jax.Array, f: jax.Array, g: jax.Array, value: jax.Array
+) -> Certificate:
+    """vmapped `repro.obs.certify.dense_certificate` over the batch."""
+
+    def one(T_i, cost_i, a_i, b_i, f_i, g_i, eps_i, lam_i, value_i):
+        return dense_certificate(
+            plan=T_i, cost=cost_i, a=a_i, b=b_i, f=f_i, g=g_i,
+            eps=eps_i, lam=lam_i, value=value_i,
+        )
+
+    return jax.vmap(one)(
+        T, bp.cost, bp.a, bp.b, f, g, bp.eps, _batched_lam(bp), value
+    )
+
+
+def _batched_sparse_cert(
+    bp: BatchedProblem,
+    t_e: jax.Array,
+    c_e: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    f: jax.Array,
+    g: jax.Array,
+    k_e: jax.Array,
+    p_e: jax.Array,
+    ess: jax.Array,
+    value: jax.Array,
+    n: int,
+    m: int,
+) -> Certificate:
+    """vmapped `repro.obs.certify.sparse_certificate` over the batch."""
+
+    def one(t_i, c_i, r_i, co_i, a_i, b_i, f_i, g_i, eps_i, lam_i, v_i, k_i, p_i, e_i):
+        return sparse_certificate(
+            t_e=t_i, c_e=c_i, rows=r_i, cols=co_i, n=n, m=m, a=a_i, b=b_i,
+            f=f_i, g=g_i, eps=eps_i, lam=lam_i, value=v_i, k_e=k_i, p_e=p_i,
+            ess=e_i,
+        )
+
+    return jax.vmap(one)(
+        t_e, c_e, rows, cols, bp.a, bp.b, f, g, bp.eps, _batched_lam(bp),
+        value, k_e, p_e, ess,
+    )
+
+
 def _element_probs(cost_i, a_i, b_i, eps_i, lam_i) -> jax.Array:
     """Per-element sampling probabilities: eq. (9) where balanced, eq. (11)
     otherwise — the batched mirror of `repro.core.api.solvers.sampling_probs`."""
@@ -478,6 +547,7 @@ def batched_solve_dense(
     tol: float = 1e-6,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> BatchedResult:
     """Scaling-domain Sinkhorn on B dense Gibbs kernels at once."""
     del keys
@@ -494,9 +564,14 @@ def batched_solve_dense(
     )
     u, v, t, err, status = res[:5]
     T = u[:, :, None] * K * v[:, None, :]
+    value = _batched_value_from_plan(bp, T)
+    cert = None
+    if certify:
+        f, g = _batched_potentials(u, v, bp.eps)
+        cert = _batched_dense_cert(bp, T, f, g, value)
     return BatchedResult(
-        u, v, t, err, _batched_value_from_plan(bp, T), status=status,
-        trace=res[5] if trace else None,
+        u, v, t, err, value, status=status,
+        trace=res[5] if trace else None, certificate=cert,
     )
 
 
@@ -508,6 +583,7 @@ def batched_solve_log(
     tol: float = 1e-9,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> BatchedResult:
     """Log-domain Sinkhorn on B log-kernels; returns potentials ``(f, g)``."""
     del keys
@@ -530,9 +606,13 @@ def batched_solve_log(
     f, g, t, err, status = res[:5]
     logT = logK + f[:, :, None] / bp.eps[:, None, None] + g[:, None, :] / bp.eps[:, None, None]
     T = jnp.where(jnp.isneginf(logT), 0.0, jnp.exp(logT))
+    value = _batched_value_from_plan(bp, T)
+    cert = None
+    if certify:
+        cert = _batched_dense_cert(bp, T, f, g, value)
     return BatchedResult(
-        f, g, t, err, _batched_value_from_plan(bp, T), status=status,
-        trace=res[5] if trace else None,
+        f, g, t, err, value, status=status,
+        trace=res[5] if trace else None, certificate=cert,
     )
 
 
@@ -660,6 +740,7 @@ def _batched_sketch_solve(
     tol: float,
     max_iter: int,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> BatchedResult:
     """Shared Spar-Sink core (paper Alg. 3/4) on a fixed-cap batched COO
     sketch: two batched **sorted** segment-sum mat-vecs per iteration
@@ -707,9 +788,29 @@ def _batched_sketch_solve(
         * jnp.take_along_axis(v, cols, axis=1)
     )
     value = _batched_value_from_te(bp, t_e, c_e, rows, cols, n, m)
+    cert = None
+    if certify:
+        eps_col = bp.eps[:, None]
+        f, g = _batched_potentials(u, v, bp.eps)
+        uh = jnp.where(u > 0, u, 1.0)
+        vh = jnp.where(v > 0, v, 1.0)
+        k_e = (
+            jnp.take_along_axis(uh, rows, axis=1)
+            * vals
+            * jnp.take_along_axis(vh, cols, axis=1)
+        )
+        alive = vals > 0
+        K_e = jnp.where(jnp.isinf(c_e), 0.0, jnp.exp(-c_e / eps_col))
+        p_e = jnp.where(
+            alive, jnp.clip(K_e / jnp.where(alive, vals, 1.0), 0.0, 1.0), 1.0
+        )
+        ess = jax.vmap(importance_ess)(vals)
+        cert = _batched_sparse_cert(
+            bp, t_e, c_e, rows, cols, f, g, k_e, p_e, ess, value, n, m
+        )
     return BatchedResult(
         u, v, t, err, value, rows, cols, vals, sketch.nnz, sketch.overflowed,
-        status, res[5] if trace else None,
+        status, res[5] if trace else None, cert,
     )
 
 
@@ -747,11 +848,12 @@ def batched_solve_spar_sink(
     tol: float = 1e-6,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> BatchedResult:
     """Spar-Sink on a dense-built batched sketch; costs for the objective
     are gathered from the batched cost matrices."""
     c_e = jax.vmap(lambda C, r, c: C[r, c])(bp.cost, sketch.rows, sketch.cols)
-    return _batched_sketch_solve(bp, sketch, c_e, tol, max_iter, trace)
+    return _batched_sketch_solve(bp, sketch, c_e, tol, max_iter, trace, certify)
 
 
 @register_batched_solver("spar_sink_mf")
@@ -763,6 +865,7 @@ def batched_solve_spar_sink_mf(
     tol: float = 1e-6,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> BatchedResult:
     """Matrix-free batched Spar-Sink: the sketch (from
     `build_batched_mf_sketch`) carries its own gathered costs, so
@@ -778,8 +881,10 @@ def batched_solve_spar_sink_mf(
             "build it with build_batched_mf_sketch()"
         )
     if stabilize:
-        return _batched_sketch_log_solve(bp, sketch, tol, max_iter, trace)
-    return _batched_sketch_solve(bp, sketch, sketch.cost_e, tol, max_iter, trace)
+        return _batched_sketch_log_solve(bp, sketch, tol, max_iter, trace, certify)
+    return _batched_sketch_solve(
+        bp, sketch, sketch.cost_e, tol, max_iter, trace, certify
+    )
 
 
 @register_batched_solver("spar_sink_log")
@@ -790,6 +895,7 @@ def batched_solve_spar_sink_log(
     tol: float = 1e-6,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> BatchedResult:
     """Log-domain batched Spar-Sink on a log-space sketch
     (`build_batched_log_sketch`): potential updates through batched sorted
@@ -801,7 +907,7 @@ def batched_solve_spar_sink_log(
             "spar_sink_log needs a log-space sketch with gathered costs; "
             "build it with build_batched_log_sketch()"
         )
-    return _batched_sketch_log_solve(bp, sketch, tol, max_iter, trace)
+    return _batched_sketch_log_solve(bp, sketch, tol, max_iter, trace, certify)
 
 
 def sparse_log_potentials(
@@ -868,6 +974,7 @@ def _batched_sketch_log_solve(
     tol: float,
     max_iter: int,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> BatchedResult:
     """Shared log-domain Spar-Sink core on a fixed-cap batched COO sketch
     whose ``vals`` carry ``logvals``: two batched **sorted**
@@ -899,7 +1006,24 @@ def _batched_sketch_log_solve(
     )
     t_e = jnp.where(jnp.isneginf(logt) | jnp.isnan(logt), 0.0, jnp.exp(logt))
     value = _batched_value_from_te(bp, t_e, sketch.cost_e, rows, cols, n, m)
+    cert = None
+    if certify:
+        c_e = sketch.cost_e
+        fh = jnp.where(jnp.isfinite(f), f, 0.0)
+        gh = jnp.where(jnp.isfinite(g), g, 0.0)
+        logk = (
+            logvals
+            + jnp.take_along_axis(fh, rows, axis=1) / eps_col
+            + jnp.take_along_axis(gh, cols, axis=1) / eps_col
+        )
+        k_e = jnp.where(jnp.isneginf(logk), 0.0, jnp.exp(logk))
+        logp = jnp.minimum(-c_e / eps_col - logvals, 0.0)
+        p_e = jnp.where(jnp.isneginf(logvals), 1.0, jnp.exp(logp))
+        ess = jax.vmap(lambda lv: importance_ess(lv, log_space=True))(logvals)
+        cert = _batched_sparse_cert(
+            bp, t_e, c_e, rows, cols, f, g, k_e, p_e, ess, value, n, m
+        )
     return BatchedResult(
         f, g, t, err, value, rows, cols, logvals, sketch.nnz, sketch.overflowed,
-        status, res[5] if trace else None,
+        status, res[5] if trace else None, cert,
     )

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sinkhorn import STATUS_CONVERGED, STATUS_LABELS, SinkhornResult
+from repro.obs.certify import Certificate
 from repro.obs.trace import Diagnostics, SketchStats
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
@@ -89,6 +90,10 @@ class Solution:
     #: sketch-quality stats (`repro.obs.SketchStats`) — populated by the
     #: sketching solvers when the solve ran with ``trace=True``
     sketch_stats: SketchStats | None = None
+    #: a posteriori quality certificate (`repro.obs.Certificate`) — populated
+    #: when the solve ran with ``certify=True`` (the default ``certify=False``
+    #: path adds zero equations to the solver jaxpr)
+    certificate: Certificate | None = None
     _plan_thunk: Callable[[], "SparsePlan | jax.Array"] | None = field(
         default=None, repr=False
     )
@@ -161,17 +166,19 @@ class Solution:
     @property
     def diagnostics(self) -> Diagnostics | None:
         """Per-solve observability record (`repro.obs.Diagnostics`): the
-        iteration ring-buffer trace plus sketch-quality stats. ``None``
-        unless the solve ran with ``trace=True`` (the default ``trace=False``
-        path carries no telemetry at all — see README "Observability")."""
+        iteration ring-buffer trace plus sketch-quality stats and (with
+        ``certify=True``) the quality certificate. ``None`` unless the solve
+        ran with ``trace=True`` or ``certify=True`` (the default path
+        carries no telemetry at all — see README "Observability")."""
         tr = getattr(self.result, "trace", None)
-        if tr is None and self.sketch_stats is None:
+        if tr is None and self.sketch_stats is None and self.certificate is None:
             return None
         return Diagnostics(
             trace=tr,
             n_iter=self.result.n_iter,
             status=self.result.status,
             sketch=self.sketch_stats,
+            certificate=self.certificate,
         )
 
     # ------------------------------------------------------------------ plan

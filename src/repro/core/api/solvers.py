@@ -72,6 +72,7 @@ from repro.core.spar_sink import (
     default_max_blocks,
     log_plan_entries,
 )
+from repro.obs.certify import dense_certificate, importance_ess, sparse_certificate
 from repro.obs.trace import SolverTrace, sketch_diagnostics
 
 __all__ = [
@@ -279,15 +280,119 @@ def _sketch_stats(sk, trace):
     return sketch_diagnostics(sk) if trace else None
 
 
-def _dense_solution(problem: OTProblem, method: str, res, Kt: jax.Array, *, nnz=None) -> Solution:
+def _problem_lam(problem: OTProblem) -> float:
+    """Marginal penalty as a plain float; ``inf`` selects the balanced dual."""
+    if isinstance(problem, UOTProblem):
+        return float(problem.lam)
+    return float("inf")
+
+
+def _scaling_potentials(res, eps: float):
+    """(f, g) = eps log(u, v) with dead atoms (zero scalings) at ``-inf``."""
+    u, v = res.u, res.v
+    f = jnp.where(u > 0, eps * jnp.log(jnp.where(u > 0, u, 1.0)), -jnp.inf)
+    g = jnp.where(v > 0, eps * jnp.log(jnp.where(v > 0, v, 1.0)), -jnp.inf)
+    return f, g
+
+
+def _kernel_cost(Kt: jax.Array, eps: float) -> jax.Array:
+    """Effective cost ``-eps log Kt`` of a (sketched) dense kernel, with
+    zeroed/negative entries mapped to ``+inf`` (outside the support)."""
+    pos = Kt > 0
+    return jnp.where(pos, -eps * jnp.log(jnp.where(pos, Kt, 1.0)), jnp.inf)
+
+
+def _sparse_cert(problem: OTProblem, sk, res, value, c_e, *, log_domain: bool):
+    """Certificate of a sketched solve in O(cap + n): dense-anchored duality
+    gap via the Horvitz-Thompson kernel entries ``k_e`` plus the
+    delta-method CI from the recovered inclusion probabilities
+    (``p*_e = K_e / vals_e``). ``c_e`` are the raw gathered costs.
+
+    Only called behind ``certify=True`` — everything here is post-loop
+    array math, so ``certify=False`` jaxprs carry zero extra equations.
+    """
+    eps = float(problem.eps)
+    lam = _problem_lam(problem)
+    n, m = problem.shape
+    if log_domain:
+        t_e = log_plan_entries(sk, res, eps)
+        f, g = res.u, res.v
+        fh = jnp.where(jnp.isfinite(f), f, 0.0)
+        gh = jnp.where(jnp.isfinite(g), g, 0.0)
+        # HT dual kernel entries at the masked potentials (== t_e if none died)
+        logk = sk.logvals + (fh[sk.rows] + gh[sk.cols]) / eps
+        k_e = jnp.where(jnp.isneginf(logk), 0.0, jnp.exp(logk))
+        # logvals = -C_e/eps - log p*_e  =>  log p*_e = -C_e/eps - logvals
+        logp = jnp.minimum(-c_e / eps - sk.logvals, 0.0)
+        p_e = jnp.where(jnp.isneginf(sk.logvals), 1.0, jnp.exp(logp))
+        ess = importance_ess(sk.logvals, log_space=True)
+    else:
+        vals = sk.vals
+        alive = vals > 0
+        t_e = res.u[sk.rows] * vals * res.v[sk.cols]
+        f, g = _scaling_potentials(res, eps)
+        uh = jnp.where(res.u > 0, res.u, 1.0)
+        vh = jnp.where(res.v > 0, res.v, 1.0)
+        k_e = uh[sk.rows] * vals * vh[sk.cols]
+        # vals = K_e / p*_e  =>  p*_e = exp(-C_e/eps) / vals
+        K_e = jnp.where(jnp.isfinite(c_e), jnp.exp(-c_e / eps), 0.0)
+        p_e = jnp.where(alive, jnp.clip(K_e / jnp.where(alive, vals, 1.0), 0.0, 1.0), 1.0)
+        ess = importance_ess(vals)
+    return sparse_certificate(
+        t_e=t_e,
+        c_e=c_e,
+        rows=sk.rows,
+        cols=sk.cols,
+        n=n,
+        m=m,
+        a=problem.a,
+        b=problem.b,
+        f=f,
+        g=g,
+        eps=eps,
+        lam=lam,
+        value=value,
+        k_e=k_e,
+        p_e=p_e,
+        ess=ess,
+    )
+
+
+def _dense_solution(
+    problem: OTProblem,
+    method: str,
+    res,
+    Kt: jax.Array,
+    *,
+    nnz=None,
+    certify: bool = False,
+    cost: jax.Array | None = None,
+) -> Solution:
     """Assemble a `Solution` whose plan is a dense ``diag(u) Kt diag(v)``.
 
     The plan array is *recomputed* by the lazy thunk rather than captured:
     a long-lived Solution then pins only ``Kt`` (for the dense/greenkhorn/
     screenkhorn paths that is the Geometry-cached kernel, already alive),
-    not a second n x m array."""
+    not a second n x m array. ``certify=True`` evaluates the duality-gap
+    certificate on the transient plan; ``cost`` overrides the certified
+    cost matrix for solvers whose kernel is itself sketched."""
     T = plan_from_scalings(res.u, Kt, res.v)
     value = problem.objective(T)
+    cert = None
+    if certify:
+        eps = float(problem.eps)
+        f, g = _scaling_potentials(res, eps)
+        cert = dense_certificate(
+            plan=T,
+            cost=problem.geom.cost if cost is None else cost,
+            a=problem.a,
+            b=problem.b,
+            f=f,
+            g=g,
+            eps=eps,
+            lam=_problem_lam(problem),
+            value=value,
+        )
     del T
     return Solution(
         method=method,
@@ -296,6 +401,7 @@ def _dense_solution(problem: OTProblem, method: str, res, Kt: jax.Array, *, nnz=
         result=res,
         domain="scaling",
         nnz=nnz,
+        certificate=cert,
         _plan_thunk=lambda: plan_from_scalings(res.u, Kt, res.v),
     )
 
@@ -312,6 +418,7 @@ def _solve_dense(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """Scaling-domain Sinkhorn on the dense Gibbs kernel (Alg. 1 / Alg. 2)."""
     K = problem.kernel()
@@ -322,7 +429,7 @@ def _solve_dense(
             K, problem.a, problem.b, problem.lam, problem.eps, tol=tol,
             max_iter=max_iter, trace=trace,
         )
-    return _dense_solution(problem, "dense", res, K)
+    return _dense_solution(problem, "dense", res, K, certify=certify)
 
 
 @register_solver("log")
@@ -332,6 +439,7 @@ def _solve_log(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """Log-domain Sinkhorn on dual potentials (survives ``eps`` down to 1e-3)."""
     logK = problem.log_kernel()
@@ -347,6 +455,19 @@ def _solve_log(
         )
     T = plan_from_potentials(res.u, logK, res.v, eps)
     value = problem.objective(T)
+    cert = None
+    if certify:
+        cert = dense_certificate(
+            plan=T,
+            cost=problem.geom.cost,
+            a=problem.a,
+            b=problem.b,
+            f=res.u,
+            g=res.v,
+            eps=eps,
+            lam=_problem_lam(problem),
+            value=value,
+        )
     del T
     return Solution(
         method="log",
@@ -354,6 +475,7 @@ def _solve_log(
         value=value,
         result=res,
         domain="log",
+        certificate=cert,
         _plan_thunk=lambda: plan_from_potentials(res.u, logK, res.v, eps),
     )
 
@@ -375,6 +497,7 @@ def _solve_spar_sink_coo(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """Spar-Sink on the padded-COO sketch: O(s) iterations, O(cap) plan.
 
@@ -385,9 +508,14 @@ def _solve_spar_sink_coo(
     """
     sk = build_coo_sketch(problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage)
     res = _coo_scaling_loop(problem, sk, tol, max_iter, trace)
+    value = _coo_value(problem, sk, res)
+    cert = None
+    if certify:
+        c_e = problem.geom.cost[sk.rows, sk.cols]
+        cert = _sparse_cert(problem, sk, res, value, c_e, log_domain=False)
     return _coo_solution(
-        "spar_sink_coo", problem, sk, res, _coo_value(problem, sk, res),
-        sketch_stats=_sketch_stats(sk, trace),
+        "spar_sink_coo", problem, sk, res, value,
+        sketch_stats=_sketch_stats(sk, trace), certificate=cert,
     )
 
 
@@ -407,7 +535,7 @@ def _coo_scaling_loop(
 
 
 def _coo_solution(
-    method: str, problem: OTProblem, sk, res, value, sketch_stats=None
+    method: str, problem: OTProblem, sk, res, value, sketch_stats=None, certificate=None
 ) -> Solution:
     def sparse_plan() -> SparsePlan:
         # T~ restricted to kept entries; padded slots carry vals == 0.
@@ -424,6 +552,7 @@ def _coo_solution(
         nnz=sk.nnz,
         overflowed=sk.overflowed,
         sketch_stats=sketch_stats,
+        certificate=certificate,
         _plan_thunk=sparse_plan,
     )
 
@@ -481,7 +610,7 @@ def _coo_log_value(problem: OTProblem, sk, c_e, res) -> jax.Array:
 
 
 def _coo_log_solution(
-    method: str, problem: OTProblem, sk, res, value, sketch_stats=None
+    method: str, problem: OTProblem, sk, res, value, sketch_stats=None, certificate=None
 ) -> Solution:
     eps = float(problem.eps)
 
@@ -500,6 +629,7 @@ def _coo_log_solution(
         nnz=sk.nnz,
         overflowed=sk.overflowed,
         sketch_stats=sketch_stats,
+        certificate=certificate,
         _plan_thunk=sparse_plan,
     )
 
@@ -516,6 +646,7 @@ def _solve_spar_sink_log(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """**Log-domain** Spar-Sink (paper Alg. 3/4), safe for small ``eps``.
 
@@ -532,9 +663,13 @@ def _solve_spar_sink_log(
         problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage
     )
     res = _sparse_log_loop(problem, sk, tol, max_iter, trace)
+    value = _coo_log_value(problem, sk, c_e, res)
+    cert = None
+    if certify:
+        cert = _sparse_cert(problem, sk, res, value, c_e, log_domain=True)
     return _coo_log_solution(
-        "spar_sink_log", problem, sk, res, _coo_log_value(problem, sk, c_e, res),
-        sketch_stats=_sketch_stats(sk, trace),
+        "spar_sink_log", problem, sk, res, value,
+        sketch_stats=_sketch_stats(sk, trace), certificate=cert,
     )
 
 
@@ -551,6 +686,7 @@ def _solve_spar_sink_mf(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """Matrix-free Spar-Sink: Õ(n) end to end, no (n, m) array anywhere.
 
@@ -584,9 +720,13 @@ def _solve_spar_sink_mf(
         else:
             sk, c_e = build_mf_log_sketch(problem, key, s, cap=cap)
         res = _sparse_log_loop(problem, sk, tol, max_iter, trace)
+        value = _coo_log_value(problem, sk, c_e, res)
+        cert = None
+        if certify:
+            cert = _sparse_cert(problem, sk, res, value, c_e, log_domain=True)
         return _coo_log_solution(
-            "spar_sink_mf", problem, sk, res, _coo_log_value(problem, sk, c_e, res),
-            sketch_stats=_sketch_stats(sk, trace),
+            "spar_sink_mf", problem, sk, res, value,
+            sketch_stats=_sketch_stats(sk, trace), certificate=cert,
         )
     if shared_variates:
         sk = build_coo_sketch(problem, key, s, cap=cap)  # guarded dense draw
@@ -600,9 +740,12 @@ def _solve_spar_sink_mf(
         )
     else:
         value = coo_objective_ot_entries(sk, c_e, res, problem.eps)
+    cert = None
+    if certify:
+        cert = _sparse_cert(problem, sk, res, value, c_e, log_domain=False)
     return _coo_solution(
         "spar_sink_mf", problem, sk, res, value,
-        sketch_stats=_sketch_stats(sk, trace),
+        sketch_stats=_sketch_stats(sk, trace), certificate=cert,
     )
 
 
@@ -616,6 +759,7 @@ def _solve_rand_sink(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """Spar-Sink with uniform probabilities (the paper's Rand-Sink baseline).
 
@@ -632,6 +776,7 @@ def _solve_rand_sink(
         tol=tol,
         max_iter=max_iter,
         trace=trace,
+        certify=certify,
     )
     sol.method = "rand_sink"
     return sol
@@ -648,6 +793,7 @@ def _solve_spar_sink_dense(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """Exact eq.(7) sketch held as a dense masked array (O(n^2) reference;
     scaling domain — same small-``eps`` caveat as ``spar_sink_coo``)."""
@@ -664,7 +810,10 @@ def _solve_spar_sink_dense(
         max_iter=max_iter,
         trace=trace,
     )
-    return _dense_solution(problem, "spar_sink_dense", res, Kt, nnz=jnp.sum(Kt > 0))
+    return _dense_solution(
+        problem, "spar_sink_dense", res, Kt, nnz=jnp.sum(Kt > 0), certify=certify,
+        cost=_kernel_cost(Kt, float(problem.eps)) if certify else None,
+    )
 
 
 @register_solver("spar_sink_block_ell")
@@ -680,6 +829,7 @@ def _solve_spar_sink_block_ell(
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
     trace: bool | int = False,
+    certify: bool = False,
 ) -> Solution:
     """Tile-granular sketch in block-ELL layout (dense MXU work per tile;
     scaling domain — same small-``eps`` caveat as ``spar_sink_coo``)."""
@@ -706,6 +856,21 @@ def _solve_spar_sink_block_ell(
     T = plan_from_scalings(res.u, Kt, res.v)
     value = problem.objective(T)
     nnz = jnp.sum(Kt > 0)
+    cert = None
+    if certify:
+        eps = float(problem.eps)
+        f, g = _scaling_potentials(res, eps)
+        cert = dense_certificate(
+            plan=T,
+            cost=_kernel_cost(Kt, eps),
+            a=problem.a,
+            b=problem.b,
+            f=f,
+            g=g,
+            eps=eps,
+            lam=_problem_lam(problem),
+            value=value,
+        )
     del T, Kt
     return Solution(
         method="spar_sink_block_ell",
@@ -714,6 +879,7 @@ def _solve_spar_sink_block_ell(
         result=res,
         domain="scaling",
         nnz=nnz,
+        certificate=cert,
         _plan_thunk=lambda: plan_from_scalings(
             res.u, sparsify.block_ell_to_dense(sk), res.v
         ),
@@ -727,7 +893,7 @@ def _solve_spar_sink_block_ell(
 
 @register_solver("greenkhorn")
 def _solve_greenkhorn(
-    problem: OTProblem, *, n_updates: int | None = None
+    problem: OTProblem, *, n_updates: int | None = None, certify: bool = False
 ) -> Solution:
     """Greedy single-coordinate scalings; ``n_updates`` defaults to 5(n+m)."""
     n, m = problem.shape
@@ -737,7 +903,7 @@ def _solve_greenkhorn(
         # fe is a static (hashable) jit argument in greenkhorn
         problem.kernel(), problem.a, problem.b, n_updates, fe=float(problem.fe)
     )
-    return _dense_solution(problem, "greenkhorn", res, problem.kernel())
+    return _dense_solution(problem, "greenkhorn", res, problem.kernel(), certify=certify)
 
 
 @register_solver("nys_sink")
@@ -748,6 +914,7 @@ def _solve_nys_sink(
     rank: int | None = None,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    certify: bool = False,
 ) -> Solution:
     """Nyström low-rank kernel + Sinkhorn. Needs near-PSD K (fails on WFR)."""
     n, m = problem.shape
@@ -768,6 +935,23 @@ def _solve_nys_sink(
     # (which re-densifies and caches, per the Solution contract).
     T = plan_from_scalings(res.u, nk.dense(), res.v)
     value = problem.objective(T)
+    cert = None
+    if certify:
+        # certify against the low-rank kernel the solver optimized; Nyström
+        # entries can go negative — those fall outside the certified support
+        eps = float(problem.eps)
+        f, g = _scaling_potentials(res, eps)
+        cert = dense_certificate(
+            plan=T,
+            cost=_kernel_cost(nk.dense(), eps),
+            a=problem.a,
+            b=problem.b,
+            f=f,
+            g=g,
+            eps=eps,
+            lam=_problem_lam(problem),
+            value=value,
+        )
     del T
     return Solution(
         method="nys_sink",
@@ -775,6 +959,7 @@ def _solve_nys_sink(
         value=value,
         result=res,
         domain="scaling",
+        certificate=cert,
         _plan_thunk=lambda: plan_from_scalings(res.u, nk.dense(), res.v),
     )
 
@@ -786,6 +971,7 @@ def _solve_screenkhorn_lite(
     decimation: int = 3,
     tol: float = DEFAULT_TOL,
     max_iter: int = 1000,
+    certify: bool = False,
 ) -> Solution:
     """Static active-set screening; screened-out atoms keep zero scalings."""
     res, _, _ = screenkhorn_lite(
@@ -798,4 +984,6 @@ def _solve_screenkhorn_lite(
         fe=problem.fe,
         renormalize=problem.is_balanced,
     )
-    return _dense_solution(problem, "screenkhorn_lite", res, problem.kernel())
+    return _dense_solution(
+        problem, "screenkhorn_lite", res, problem.kernel(), certify=certify
+    )

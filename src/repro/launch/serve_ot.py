@@ -33,7 +33,16 @@ from repro.core import Geometry, OTProblem, PointCloudGeometry, UOTProblem, s0, 
 from repro.core.api.solution import Solution
 from repro.obs.metrics import MetricsRegistry
 
-__all__ = ["OTRequest", "OTServer"]
+__all__ = ["OTRequest", "OTServer", "RequestTimeout"]
+
+
+class RequestTimeout(TimeoutError):
+    """A queued request exceeded its ``timeout_s`` before dispatch.
+
+    Set as the exception of the request's future (so ``future.result()``
+    raises it) instead of leaving the future forever unresolved; each
+    expiry also bumps the ``ot_server_timeouts_total`` counter.
+    """
 
 
 @dataclass
@@ -44,6 +53,7 @@ class OTRequest:
     method: str
     key: jax.Array | None
     opts: dict
+    timeout_s: float | None = None
     future: "Future[Solution]" = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
 
@@ -62,6 +72,11 @@ class OTServer:
     gauge, and histograms ``serve.batch_fill`` (dispatched size /
     ``max_batch``) and ``serve.latency_seconds`` (submit-to-resolve per
     request, the distribution behind ``stats()``'s p50/p95/p99).
+    ``certify=True`` requests additionally feed the ``serve.cert_gap`` /
+    ``serve.cert_ci_width`` histograms and the ``ot_cert_gap_p95`` /
+    ``ot_cert_ci_width_p95`` gauges; requests expiring past their
+    ``timeout_s`` bump ``ot_server_timeouts_total`` and fail their future
+    with `RequestTimeout`.
     """
 
     def __init__(
@@ -112,10 +127,17 @@ class OTServer:
         *,
         method: str = "spar_sink_coo",
         key: jax.Array | None = None,
+        timeout_s: float | None = None,
         **opts,
     ) -> "Future[Solution]":
-        """Enqueue one problem; resolves to its `Solution` after dispatch."""
-        req = OTRequest(problem, method, key, opts)
+        """Enqueue one problem; resolves to its `Solution` after dispatch.
+
+        ``timeout_s`` bounds the queue wait: a request still undispatched
+        that long after submit fails with `RequestTimeout` instead of
+        occupying a batch slot (and is counted in
+        ``ot_server_timeouts_total``).
+        """
+        req = OTRequest(problem, method, key, opts, timeout_s=timeout_s)
         self._queue.put(req)
         self.metrics.gauge("serve.queue_depth", float(self._queue.qsize()))
         return req.future
@@ -155,6 +177,7 @@ class OTServer:
             batch = self._collect()
             if batch is None:
                 return
+            batch = self._expire(batch)
             # group by (method, opts, has-key): only identical programs share
             # a dispatch, and a keyless request can't poison a keyed group
             # (it fails alone with the executor's clear missing-keys error)
@@ -166,6 +189,23 @@ class OTServer:
                 ).append(r)
             for (method, _, _), reqs in groups.items():
                 self._dispatch(method, reqs)
+
+    def _expire(self, batch: list[OTRequest]) -> list[OTRequest]:
+        """Fail requests whose queue wait exceeded their ``timeout_s`` with
+        `RequestTimeout`; returns the still-live remainder."""
+        now = time.perf_counter()
+        live = []
+        for r in batch:
+            if r.timeout_s is not None and now - r.t_submit > r.timeout_s:
+                self.metrics.counter("ot_server_timeouts_total")
+                if not r.future.cancelled():
+                    r.future.set_exception(RequestTimeout(
+                        f"request queued {now - r.t_submit:.3f}s, "
+                        f"timeout_s={r.timeout_s}"
+                    ))
+            else:
+                live.append(r)
+        return live
 
     def _dispatch(self, method: str, reqs: list[OTRequest]) -> None:
         try:
@@ -194,6 +234,30 @@ class OTServer:
             self.metrics.observe("serve.batch_fill", len(reqs) / self.max_batch)
             for r in reqs:
                 self.metrics.observe("serve.latency_seconds", now - r.t_submit)
+            # quality-certificate telemetry (certify=True dispatches only):
+            # per-request gap / CI-width histograms plus p95 gauges, so a
+            # scrape sees serving quality next to serving latency
+            cert_seen = False
+            for sol in sols:
+                cert = sol.certificate
+                if cert is None:
+                    continue
+                cert_seen = True
+                gap = float(cert.gap)
+                if np.isfinite(gap):
+                    self.metrics.observe("serve.cert_gap", gap)
+                width = float(cert.ci_width)
+                if np.isfinite(width):
+                    self.metrics.observe("serve.cert_ci_width", width)
+            if cert_seen:
+                self.metrics.gauge(
+                    "ot_cert_gap_p95",
+                    self.metrics.get_histogram("serve.cert_gap")["p95"],
+                )
+                self.metrics.gauge(
+                    "ot_cert_ci_width_p95",
+                    self.metrics.get_histogram("serve.cert_ci_width")["p95"],
+                )
         for r, sol in zip(reqs, sols):
             r.future.set_result(sol)
 

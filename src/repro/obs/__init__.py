@@ -8,16 +8,29 @@ Three layers (see ISSUE 7 / README "Observability"):
   ``Solution.diagnostics``. Enable with ``solve(..., trace=True)``; the
   ``trace=False`` default is zero-overhead (identical jaxprs, guarded by
   tests).
+* `certify`: a posteriori solution-quality certificates (`Certificate`) —
+  duality gap, marginal-violation error bound, and importance-sampling
+  confidence interval — computed in O(nnz + n) from converged potentials.
+  Enable with ``solve(..., certify=True)``; the ``certify=False`` default
+  is zero-overhead (identical jaxprs, guarded by tests).
 * `metrics`: a thread-safe `MetricsRegistry` (counters / gauges /
   p50-p95-p99 histograms) instrumenting `BucketedExecutor` and
   ``serve_ot``'s `OTServer`; `export` renders JSON events or
-  Prometheus text.
+  Prometheus text (cumulative ``_bucket`` histogram exposition).
 * profiling: ``tools/profile_solve.py`` compiles any registered method and
   reports XLA cost-analysis flops/bytes per iteration;
   ``benchmarks/bench_serve.py`` turns the serving path into a sustained
   requests/sec + tail-latency benchmark (``BENCH_serve.json``).
 """
+from repro.obs.certify import (
+    DEFAULT_Z,
+    Certificate,
+    dense_certificate,
+    importance_ess,
+    sparse_certificate,
+)
 from repro.obs.metrics import (
+    DEFAULT_BUCKETS,
     HISTOGRAM_WINDOW,
     MetricsRegistry,
     default_registry,
@@ -36,17 +49,23 @@ from repro.obs.trace import (
 )
 
 __all__ = [
+    "Certificate",
+    "DEFAULT_BUCKETS",
     "DEFAULT_TRACE_LEN",
+    "DEFAULT_Z",
     "Diagnostics",
     "HISTOGRAM_WINDOW",
     "MetricsRegistry",
     "SketchStats",
     "SolverTrace",
     "default_registry",
+    "dense_certificate",
     "empty_trace",
     "export",
+    "importance_ess",
     "record_iteration",
     "resolve_trace_len",
     "sketch_diagnostics",
+    "sparse_certificate",
     "trim_trace",
 ]

@@ -1,0 +1,368 @@
+"""A posteriori solution-quality certificates, O(nnz + n) per solve.
+
+`repro.obs.trace` reports solver *effort* (iterations, matvecs); this module
+reports *trustworthiness*: given the converged potentials of a (sketched)
+entropic OT/UOT solve, how wrong can the reported objective be?
+
+A `Certificate` combines three computable quantities, none of which touches
+an (n, m) array:
+
+1. **Duality gap** — the raw-cost primal objective of the returned plan
+   minus a dual objective at the returned potentials, *anchored to the
+   dense problem*: on a sketch, the Horvitz-Thompson-inflated kernel
+   entries ``k_e = exp((f_i + g_j)/eps) K_e / p_e`` make the sketched
+   kernel sum an unbiased estimate of the dense dual's kernel term, so
+   ``value - dual`` estimates ``value - dual_dense(f, g) >= value - V*``
+   by weak duality at *any* finite potentials — an upper bound on the
+   excess objective over the dense optimum ``V*``, not just over the
+   sketched one (in the spirit of the certified screening bounds of
+   Alaya et al., arXiv 1906.08540; the UOT dual follows the analysis of
+   Pham et al., arXiv 2002.03293, and degenerates to the balanced form at
+   ``lam = inf``).
+2. **Coverage deficit** — the sketch only *observes* entry ``(i, j)`` with
+   probability ``p_e``; at the fitted potentials the design-expected dense
+   objective mass sitting on entries the sketch failed to sample is
+   estimated by ``sum_e t_e (|c_e| + eps)(1 - p_e)`` (each kept entry
+   stands in for ``(1 - p_e)`` unsampled siblings of the same plan
+   weight). This is the dominant error source at partial coverage — the
+   fitted potentials adapt to the sample, so the realized
+   Horvitz-Thompson dual is systematically optimistic about off-sketch
+   kernel mass, and a within-sample variance term alone cannot see it.
+3. **Marginal violation** — L1 row/column feasibility error of the plan.
+   For balanced OT an infeasible plan can be rounded onto the transport
+   polytope at an objective cost of at most ``cost_scale * (L1_row +
+   L1_col)`` (Altschuler et al.-style rounding), so the violation converts
+   into a certified additive objective-error term. For UOT the marginals
+   are *meant* to deviate (the KL penalty prices the slack, which the
+   duality gap already accounts for), so the term is zero there.
+4. **Delta-method confidence interval** — the sketched objective is an
+   importance-sampled estimate; each kept entry ``e`` was included with a
+   known probability ``p_e``, so the estimator variance is estimated by
+   ``sum_e s_e^2 (1 - p_e)`` with ``s_e`` the entry's objective sensitivity
+   (its cost + entropy contribution, plus the KL-marginal derivative
+   ``lam * t_e * log(marginal/target)`` on UOT). The CI is a plug-in
+   normal interval around ``value``.
+
+``error_bound = gap + coverage_deficit + marginal_term +
+dual_noise_halfwidth`` is the certified additive bound on
+``|value - dense entropic optimum|`` surfaced
+end to end (``Solution.certificate``, `Diagnostics.summary`, `OTServer`
+gauges, ``benchmarks/bench_certify.py``); the last term covers the
+sampling noise of the dual's Horvitz-Thompson kernel estimate at the same
+confidence level as the CI. The dual and the gap are exact consequences
+of weak duality in expectation; the noise/CI terms are asymptotic — they
+assume the importance weights have a finite second moment and enough
+effective samples (check ``ess``), and they treat the converged
+potentials as fixed. See README "Quality certificates" for when each
+piece is valid.
+
+Everything here is pure array math (jit/vmap-safe, no dependency on the
+solver modules); the solver registry attaches certificates behind the
+static ``certify=False`` option so default jaxprs carry zero extra ops.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Certificate",
+    "DEFAULT_Z",
+    "dense_certificate",
+    "importance_ess",
+    "sparse_certificate",
+]
+
+#: normal critical value of the delta-method CI (z = 2.576 <-> 99% two-sided)
+DEFAULT_Z = 2.576
+
+
+class Certificate(NamedTuple):
+    """Solution-quality certificate (all fields () scalars, or (B,) when
+    produced by a batched solver before per-element slicing).
+
+    ``gap``/``dual``/``primal`` certify *convergence* on the problem the
+    solver saw (the sketched kernel for sparse methods); ``ci_*``/``ess``
+    quantify *sampling* error of the importance-sparsified objective
+    estimate (NaN on dense, sketch-free solves); ``error_bound`` is the
+    combined certified additive bound on the objective error.
+    """
+
+    value: jax.Array  # objective estimate being certified
+    primal: jax.Array  # primal objective of the returned plan (solver's problem)
+    dual: jax.Array  # weak-duality lower bound at the returned potentials
+    gap: jax.Array  # max(primal - dual, 0)
+    rel_gap: jax.Array  # gap / max(|value|, 1)
+    marg_err_row: jax.Array  # ||T 1 - a||_1
+    marg_err_col: jax.Array  # ||T^T 1 - b||_1
+    cost_scale: jax.Array  # max |cost| on the certified support
+    coverage_deficit: jax.Array  # est. objective mass on unsampled entries
+    error_bound: jax.Array  # gap + coverage + marginal term + noise terms
+    ci_low: jax.Array  # delta-method CI (NaN when no sampling was involved)
+    ci_high: jax.Array
+    ess: jax.Array  # importance-weight effective sample size (NaN if n/a)
+
+    @property
+    def ci_width(self) -> jax.Array:
+        return self.ci_high - self.ci_low
+
+    def summary(self) -> dict:
+        """Small host-side dict (JSON-friendly) for logging/serving export."""
+        out = {
+            "value": float(self.value),
+            "gap": float(self.gap),
+            "rel_gap": float(self.rel_gap),
+            "marg_err_row": float(self.marg_err_row),
+            "marg_err_col": float(self.marg_err_col),
+            "coverage_deficit": float(self.coverage_deficit),
+            "error_bound": float(self.error_bound),
+            "ci_low": float(self.ci_low),
+            "ci_high": float(self.ci_high),
+            "ci_width": float(self.ci_width),
+            "ess": float(self.ess),
+        }
+        return out
+
+
+# --------------------------------------------------------------------------
+# Shared pieces
+# --------------------------------------------------------------------------
+
+
+def _kl(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``sum x log(x/y) - x + y`` with the 0 log 0 = 0 convention (matches
+    `repro.core.sinkhorn.kl_divergence` without importing the solver layer)."""
+    ratio = jnp.where(x > 0, x, 1.0) / jnp.where(y > 0, y, 1.0)
+    return jnp.sum(jnp.where(x > 0, x * jnp.log(ratio), 0.0) - x + y)
+
+
+def _log_ratio(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``log(x/y)`` masked to 0 where either side is non-positive."""
+    ok = (x > 0) & (y > 0)
+    return jnp.where(
+        ok, jnp.log(jnp.where(ok, x, 1.0) / jnp.where(ok, y, 1.0)), 0.0
+    )
+
+
+def _finite(pot: jax.Array) -> jax.Array:
+    """Potentials with dead atoms (``±inf``/NaN) replaced by 0 — still a
+    valid dual point by weak duality, just not the tightest one."""
+    return jnp.where(jnp.isfinite(pot), pot, 0.0)
+
+
+def _dual_marginal_term(pot: jax.Array, w: jax.Array, lam: jax.Array) -> jax.Array:
+    """One marginal's dual term: ``<w, f>`` balanced (``lam = inf``),
+    ``-lam <w, exp(-f/lam) - 1>`` unbalanced (Pham et al. 2002.03293)."""
+    p = _finite(pot)
+    balanced = jnp.isinf(lam)
+    safe_lam = jnp.where(balanced, jnp.ones((), p.dtype), lam)
+    bal = jnp.sum(w * p)
+    unb = -safe_lam * jnp.sum(w * jnp.expm1(-p / safe_lam))
+    return jnp.where(balanced, bal, unb)
+
+
+def importance_ess(weights: jax.Array, log_space: bool = False) -> jax.Array:
+    """``(sum w)^2 / sum w^2`` over a weight vector (zeros/-inf padding is
+    inert); ``log_space=True`` reads the input as log-weights and computes
+    the ratio via logsumexp so small-eps weights don't flush to zero."""
+    if log_space:
+        lse1 = jax.scipy.special.logsumexp(weights)
+        lse2 = jax.scipy.special.logsumexp(2.0 * weights)
+        return jnp.where(jnp.isneginf(lse1), 0.0, jnp.exp(2.0 * lse1 - lse2))
+    tot = jnp.sum(weights)
+    sq = jnp.sum(weights * weights)
+    return jnp.where(sq > 0, tot * tot / jnp.where(sq > 0, sq, 1.0), 0.0)
+
+
+# --------------------------------------------------------------------------
+# Certificates
+# --------------------------------------------------------------------------
+
+
+def sparse_certificate(
+    *,
+    t_e: jax.Array,
+    c_e: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    n: int,
+    m: int,
+    a: jax.Array,
+    b: jax.Array,
+    f: jax.Array,
+    g: jax.Array,
+    eps,
+    lam,
+    value: jax.Array,
+    k_e: jax.Array | None = None,
+    p_e: jax.Array | None = None,
+    ess: jax.Array | None = None,
+    z: float = DEFAULT_Z,
+) -> Certificate:
+    """Certificate of a sparse (sketched) solve in O(nnz + n).
+
+    Parameters
+    ----------
+    t_e:
+        (cap,) plan entries of the returned solution (0 on padding).
+    c_e:
+        (cap,) *raw* gathered costs ``C[rows, cols]`` — used for the
+        objective-sensitivity CI and the rounding term's ``cost_scale``
+        (``±inf`` entries are masked).
+    rows, cols:
+        (cap,) COO indices; ``n``/``m`` the support sizes (static).
+    f, g:
+        Dual potentials (``-inf`` on dead atoms; masked to 0 internally —
+        weak duality holds for any finite potentials, so the gap stays a
+        certificate even on partially dead sketches).
+    eps, lam:
+        Regularization / marginal penalty; ``lam = inf`` selects the
+        balanced dual and enables the marginal rounding term.
+    value:
+        The objective estimate being certified (raw-cost objective).
+    k_e:
+        (cap,) kernel-consistency entries ``exp((f~_i + g~_j - c_e)/eps)``
+        evaluated at the *masked* potentials — defaults to ``t_e``, which
+        is exact whenever no atom is dead.
+    p_e:
+        (cap,) entry inclusion probabilities of the importance sketch;
+        enables the delta-method CI (omitted -> CI fields are NaN and the
+        bound carries no sampling term).
+    ess:
+        Precomputed importance-weight ESS to surface (NaN when omitted).
+    z:
+        Normal critical value for the CI (default `DEFAULT_Z`).
+    """
+    dt = t_e.dtype
+    eps = jnp.asarray(eps, dt)
+    lam = jnp.asarray(lam, dt)
+    balanced = jnp.isinf(lam)
+    safe_lam = jnp.where(balanced, jnp.ones((), dt), lam)
+
+    mask = t_e > 0
+    c_fin = jnp.where(jnp.isfinite(c_e), c_e, 0.0)
+    logt = jnp.log(jnp.where(mask, t_e, 1.0))
+    row = jax.ops.segment_sum(t_e, rows, num_segments=n)
+    col = jax.ops.segment_sum(t_e, cols, num_segments=m)
+    marg_row = jnp.sum(jnp.abs(row - a))
+    marg_col = jnp.sum(jnp.abs(col - b))
+
+    # `value` is the raw-cost objective of the returned plan, i.e. the
+    # *dense* problem's primal at T~ (entries off the sketch carry 0 mass),
+    # so `value - dual` upper-bounds the excess over the dense optimum.
+    primal = value
+    ke = t_e if k_e is None else k_e
+    kernel_mass = jnp.sum(ke)
+    dual = (
+        _dual_marginal_term(f, a, lam)
+        + _dual_marginal_term(g, b, lam)
+        - eps * kernel_mass
+    )
+    gap = jnp.maximum(primal - dual, 0.0)
+    cost_scale = jnp.max(jnp.where(mask, jnp.abs(c_fin), 0.0), initial=0.0)
+
+    if p_e is None:
+        half_dual = coverage = jnp.zeros((), dt)
+        ci_low = ci_high = jnp.full((), jnp.nan, dt)
+    else:
+        p = jnp.clip(p_e, jnp.finfo(dt).tiny, 1.0)
+        # design-expected dense objective mass on entries the sketch never
+        # sampled: each kept entry stands in for (1 - p_e) unsampled
+        # siblings of the same plan weight and cost (+ eps entropy scale)
+        coverage = jnp.sum(
+            jnp.where(mask, t_e * (jnp.abs(c_fin) + eps) * (1.0 - p), 0.0)
+        )
+        # per-entry objective sensitivity: cost + entropy contribution, plus
+        # the KL-marginal derivative lam log(marginal/target) on UOT
+        sens = jnp.where(mask, t_e * c_fin + eps * t_e * (logt - 1.0), 0.0)
+        uot_sens = safe_lam * t_e * (_log_ratio(row, a)[rows] + _log_ratio(col, b)[cols])
+        sens = sens + jnp.where(balanced | ~mask, 0.0, uot_sens)
+        var = jnp.sum(sens * sens * (1.0 - p))
+        half = z * jnp.sqrt(var)
+        ci_low = value - half
+        ci_high = value + half
+        # dual kernel term is a Horvitz-Thompson sum of eps * k_e — its
+        # sampling noise is what can make the realized dual exceed the
+        # dense dual, so the bound carries its own z * sd allowance
+        half_dual = z * jnp.sqrt(jnp.sum((eps * ke) ** 2 * (1.0 - p)))
+
+    # balanced: rounding an infeasible plan onto the polytope moves the
+    # objective by at most cost_scale * L1 violation (covers value < V*);
+    # UOT slack is feasible, so value >= V* holds outright
+    marg_term = jnp.where(balanced, cost_scale * (marg_row + marg_col), 0.0)
+    error_bound = gap + coverage + marg_term + half_dual
+    return Certificate(
+        value=value,
+        primal=primal,
+        dual=dual,
+        gap=gap,
+        rel_gap=gap / jnp.maximum(jnp.abs(value), 1.0),
+        marg_err_row=marg_row,
+        marg_err_col=marg_col,
+        cost_scale=cost_scale,
+        coverage_deficit=coverage,
+        error_bound=error_bound,
+        ci_low=ci_low,
+        ci_high=ci_high,
+        ess=jnp.full((), jnp.nan, dt) if ess is None else jnp.asarray(ess, dt),
+    )
+
+
+def dense_certificate(
+    *,
+    plan: jax.Array,
+    cost: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    f: jax.Array,
+    g: jax.Array,
+    eps,
+    lam,
+    value: jax.Array,
+) -> Certificate:
+    """Certificate of a dense solve (no sketch, hence no sampling CI).
+
+    ``primal`` is the raw-cost objective of the plan (= ``value``), the
+    dual is evaluated at the masked potentials against the dense kernel —
+    O(n m), which the dense solvers already pay per iteration.
+    """
+    dt = plan.dtype
+    eps = jnp.asarray(eps, dt)
+    lam = jnp.asarray(lam, dt)
+    balanced = jnp.isinf(lam)
+    fh, gh = _finite(f), _finite(g)
+    # exp((f~ + g~ - c)/eps) summed over finite-cost entries — the dual's
+    # kernel term at the masked potentials (== plan mass when nothing died)
+    ex = (fh[:, None] + gh[None, :] - jnp.where(jnp.isinf(cost), jnp.inf, cost)) / eps
+    kernel_mass = jnp.sum(jnp.where(jnp.isneginf(ex), 0.0, jnp.exp(ex)))
+    dual = (
+        _dual_marginal_term(f, a, lam)
+        + _dual_marginal_term(g, b, lam)
+        - eps * kernel_mass
+    )
+    row = jnp.sum(plan, axis=1)
+    col = jnp.sum(plan, axis=0)
+    marg_row = jnp.sum(jnp.abs(row - a))
+    marg_col = jnp.sum(jnp.abs(col - b))
+    gap = jnp.maximum(value - dual, 0.0)
+    c_fin = jnp.where(jnp.isfinite(cost), jnp.abs(cost), 0.0)
+    cost_scale = jnp.max(c_fin, initial=0.0)
+    marg_term = jnp.where(balanced, cost_scale * (marg_row + marg_col), 0.0)
+    nan = jnp.full((), jnp.nan, dt)
+    return Certificate(
+        value=value,
+        primal=value,
+        dual=dual,
+        gap=gap,
+        rel_gap=gap / jnp.maximum(jnp.abs(value), 1.0),
+        marg_err_row=marg_row,
+        marg_err_col=marg_col,
+        cost_scale=cost_scale,
+        coverage_deficit=jnp.zeros((), dt),
+        error_bound=gap + marg_term,
+        ci_low=nan,
+        ci_high=nan,
+        ess=nan,
+    )

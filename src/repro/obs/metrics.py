@@ -12,12 +12,16 @@ under ``registry.locked()`` — the registry lock is reentrant, so metric
 methods remain usable inside the block.
 
 `export` renders a snapshot either as structured JSON event rows
-(``fmt="json"``) or Prometheus text exposition (``fmt="prometheus"``,
-quantiles as ``{quantile="0.99"}`` labels). A module-level `default_registry`
-serves code that doesn't inject its own.
+(``fmt="json"``) or Prometheus text exposition (``fmt="prometheus"``:
+real cumulative ``_bucket{le="..."}``/``_sum``/``_count`` histogram
+families over the `DEFAULT_BUCKETS` ladder — scrapeable by
+``histogram_quantile()`` — plus windowed-exact quantiles as a companion
+``_quantile`` gauge family). A module-level `default_registry` serves code
+that doesn't inject its own.
 """
 from __future__ import annotations
 
+import bisect
 import json
 import math
 import threading
@@ -26,6 +30,7 @@ from contextlib import contextmanager
 from typing import Iterator
 
 __all__ = [
+    "DEFAULT_BUCKETS",
     "HISTOGRAM_WINDOW",
     "MetricsRegistry",
     "default_registry",
@@ -34,6 +39,15 @@ __all__ = [
 
 #: bounded per-histogram observation window for exact quantiles
 HISTOGRAM_WINDOW = 8192
+
+#: Prometheus-style cumulative bucket ladder (upper bounds, ``le``
+#: semantics). Log-spaced 1-2.5-5 decades covering sub-millisecond
+#: latencies up to tens of seconds — which also serves the unit-interval
+#: ratios (batch fill, occupancy) and certificate gaps we record.
+DEFAULT_BUCKETS = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+    0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0,
+)
 
 _QUANTILES = (0.5, 0.95, 0.99)
 
@@ -52,17 +66,34 @@ def _quantile(sorted_vals: list[float], q: float) -> float:
 
 
 class _Histogram:
-    __slots__ = ("window", "count", "total")
+    __slots__ = ("window", "count", "total", "bucket_counts")
 
     def __init__(self) -> None:
         self.window: deque[float] = deque(maxlen=HISTOGRAM_WINDOW)
         self.count = 0
         self.total = 0.0
+        # per-slot (non-cumulative) counts over DEFAULT_BUCKETS; values past
+        # the last bound live only in the implicit +Inf bucket (= count).
+        # Cumulative-since-start, unlike the bounded quantile window.
+        self.bucket_counts = [0] * len(DEFAULT_BUCKETS)
 
     def observe(self, value: float) -> None:
         self.window.append(value)
         self.count += 1
         self.total += value
+        i = bisect.bisect_left(DEFAULT_BUCKETS, value)
+        if i < len(DEFAULT_BUCKETS):
+            self.bucket_counts[i] += 1
+
+    def cumulative_buckets(self) -> list[tuple[float, int]]:
+        """``(le, cumulative_count)`` pairs in Prometheus ``le`` semantics
+        (the +Inf bucket is ``count`` and is left to the exporter)."""
+        out: list[tuple[float, int]] = []
+        c = 0
+        for le, k in zip(DEFAULT_BUCKETS, self.bucket_counts):
+            c += k
+            out.append((le, c))
+        return out
 
     def snapshot(self) -> dict:
         vals = sorted(self.window)
@@ -141,15 +172,23 @@ class MetricsRegistry:
             hist = self._histograms.get(name)
             return hist.snapshot() if hist else _Histogram().snapshot()
 
-    def snapshot(self) -> dict:
-        """Consistent point-in-time copy of every metric."""
+    def snapshot(self, include_buckets: bool = False) -> dict:
+        """Consistent point-in-time copy of every metric.
+
+        ``include_buckets=True`` adds each histogram's cumulative
+        ``"buckets"`` list (``(le, count)`` pairs) — used by the Prometheus
+        exporter; the default keeps the JSON-facing shape unchanged."""
         with self._lock:
+            hists = {}
+            for n, h in self._histograms.items():
+                snap = h.snapshot()
+                if include_buckets:
+                    snap["buckets"] = h.cumulative_buckets()
+                hists[n] = snap
             return {
                 "counters": dict(self._counters),
                 "gauges": dict(self._gauges),
-                "histograms": {
-                    n: h.snapshot() for n, h in self._histograms.items()
-                },
+                "histograms": hists,
             }
 
 
@@ -167,11 +206,14 @@ def export(fmt: str = "json", registry: MetricsRegistry | None = None) -> str:
 
     ``fmt="json"``: one structured event row per metric —
     ``{"metric": name, "type": kind, ...values}`` — as a JSON array.
-    ``fmt="prometheus"``: text exposition; histograms become a summary-style
-    family with ``{quantile="..."}`` labels plus ``_count``/``_sum``.
+    ``fmt="prometheus"``: text exposition; each histogram becomes a real
+    ``histogram`` family — cumulative ``_bucket{le="..."}`` counters over
+    `DEFAULT_BUCKETS` (plus ``le="+Inf"``), ``_sum`` and ``_count`` — so
+    ``histogram_quantile()`` works server-side; the windowed-exact
+    p50/p95/p99 are kept as a companion ``<name>_quantile`` gauge family.
     """
     reg = registry if registry is not None else default_registry
-    snap = reg.snapshot()
+    snap = reg.snapshot(include_buckets=fmt == "prometheus")
     if fmt == "json":
         rows = []
         for name, v in sorted(snap["counters"].items()):
@@ -191,9 +233,15 @@ def export(fmt: str = "json", registry: MetricsRegistry | None = None) -> str:
             lines += [f"# TYPE {pn} gauge", f"{pn} {v:g}"]
         for name, h in sorted(snap["histograms"].items()):
             pn = _prom_name(name)
-            lines.append(f"# TYPE {pn} summary")
+            lines.append(f"# TYPE {pn} histogram")
+            for le, c in h["buckets"]:
+                lines.append(f'{pn}_bucket{{le="{le:g}"}} {c}')
+            lines.append(f'{pn}_bucket{{le="+Inf"}} {h["count"]}')
+            lines += [f"{pn}_sum {h['sum']:g}", f"{pn}_count {h['count']}"]
+            lines.append(f"# TYPE {pn}_quantile gauge")
             for q in _QUANTILES:
-                lines.append(f'{pn}{{quantile="{q:g}"}} {h[f"p{int(q * 100)}"]:g}')
-            lines += [f"{pn}_count {h['count']}", f"{pn}_sum {h['sum']:g}"]
+                lines.append(
+                    f'{pn}_quantile{{quantile="{q:g}"}} {h[f"p{int(q * 100)}"]:g}'
+                )
         return "\n".join(lines) + "\n"
     raise ValueError(f"unknown export format {fmt!r} (use 'json' or 'prometheus')")

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.certify import Certificate
+
 __all__ = [
     "DEFAULT_TRACE_LEN",
     "Diagnostics",
@@ -225,13 +227,15 @@ class Diagnostics:
 
     ``trace`` is the raw device ring buffer (None when the solve ran with
     ``trace=False``); the accessors below sync to host and unroll it.
-    ``sketch`` is the `SketchStats` of sketching solvers (None otherwise).
+    ``sketch`` is the `SketchStats` of sketching solvers (None otherwise);
+    ``certificate`` the quality `Certificate` of ``certify=True`` solves.
     """
 
     trace: SolverTrace | None
     n_iter: jax.Array
     status: jax.Array | None = None
     sketch: SketchStats | None = None
+    certificate: Certificate | None = None
 
     @property
     def n_matvec(self) -> int:
@@ -280,4 +284,6 @@ class Diagnostics:
                 out["sketch"]["acceptance_rate"] = float(self.sketch.acceptance_rate)
             if self.sketch.dup_merge_rate is not None:
                 out["sketch"]["dup_merge_rate"] = float(self.sketch.dup_merge_rate)
+        if self.certificate is not None:
+            out["certificate"] = self.certificate.summary()
         return out

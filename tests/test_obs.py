@@ -474,18 +474,26 @@ def test_registry_reset_prefix_and_locked():
 def test_registry_thread_safety():
     reg = MetricsRegistry()
 
-    def work():
-        for _ in range(1000):
+    def work(i):
+        for j in range(1000):
             reg.counter("c")
-            reg.observe("h", 1.0)
+            # alternate across two buckets so cumulative counts are exercised
+            reg.observe("h", 0.001 if (i + j) % 2 else 0.3)
 
-    threads = [threading.Thread(target=work) for _ in range(8)]
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
     for t in threads:
         t.start()
     for t in threads:
         t.join()
     assert reg.get_counter("c") == 8000.0
     assert reg.get_histogram("h")["count"] == 8000
+    # cumulative bucket counts must be monotone and account for every sample
+    snap = reg.snapshot(include_buckets=True)
+    buckets = dict(snap["histograms"]["h"]["buckets"])
+    assert buckets[0.001] == 4000
+    assert buckets[0.5] == 8000
+    cum = [c for _, c in sorted(buckets.items())]
+    assert cum == sorted(cum)
 
 
 def test_export_json_and_prometheus():
@@ -502,8 +510,16 @@ def test_export_json_and_prometheus():
     assert by_name["serve.latency_seconds"]["p99"] == pytest.approx(0.25)
     text = export("prometheus", reg)
     assert "# TYPE executor_cache_hit counter" in text
-    assert 'serve_latency_seconds{quantile="0.99"} 0.25' in text
+    # real histogram exposition: cumulative le-buckets + sum/count, with the
+    # windowed-exact quantiles kept as a companion gauge family
+    assert "# TYPE serve_latency_seconds histogram" in text
+    assert 'serve_latency_seconds_bucket{le="0.25"} 1' in text
+    assert 'serve_latency_seconds_bucket{le="0.1"} 0' in text
+    assert 'serve_latency_seconds_bucket{le="+Inf"} 1' in text
+    assert 'serve_latency_seconds_quantile{quantile="0.99"} 0.25' in text
     assert "serve_latency_seconds_count 1" in text
+    # json rows keep the pre-bucket shape (no "buckets" key)
+    assert "buckets" not in by_name["serve.latency_seconds"]
     with pytest.raises(ValueError):
         export("xml", reg)
 

@@ -382,6 +382,32 @@ def test_mf_stabilized_log_solve_never_allocates_n_squared():
     assert biggest < 100 * n, biggest  # O(n + cap); n*m would be 1.7e10
 
 
+def test_mf_certified_solve_never_allocates_n_squared():
+    """Acceptance: certify=True keeps the Õ(n) guarantee — the certificate
+    is O(cap + n) math, so the full spar_sink_mf solve (scaling and
+    stabilized-log domains) still traces without any (n, m) intermediate
+    at n = 2^17."""
+    n = 2 ** 17
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(size=(n, 2)), jnp.float32)
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n)))
+    s = 100_000.0
+
+    for eps, stabilize in ((EPS, False), (1e-3, True)):
+        problem = OTProblem(PointCloudGeometry(x), a, b, eps)
+
+        def certified_core(key, problem=problem, stabilize=stabilize):
+            sol = solve(problem, method="spar_sink_mf", key=key, s=s,
+                        tol=1e-3, max_iter=20, stabilize=stabilize,
+                        certify=True)
+            return sol.value, sol.certificate
+
+        jaxpr = jax.make_jaxpr(certified_core)(jax.random.PRNGKey(0))
+        biggest = _max_aval_elems(jaxpr)
+        assert biggest < 100 * n, (stabilize, biggest)  # O(n + cap)
+
+
 def test_mf_end_to_end_2e17_completes():
     """Acceptance: solve(problem, method='spar_sink_mf') at n = 2^17 on CPU
     completes (the geometry guard makes any dense fallback raise)."""

@@ -1,0 +1,172 @@
+"""Perf-regression gate over the committed ``BENCH_*.json`` baselines.
+
+Re-runs the machine-readable benchmark suites (``benchmarks/run.py
+--emit-json``, the reduced/smoke sizes) into a scratch dir, then compares
+every row against the committed baselines by ``name``:
+
+* **wall time**: fail when a row regresses by more than ``--time-ratio``
+  (default 1.25, i.e. >25% slower) beyond an absolute ``--time-slack``
+  noise floor;
+* **RMAE**: fail on *any* accuracy regression beyond a tiny float-noise
+  allowance (``--rmae-slack``, relative) — seeds are pinned, so RMAE is
+  deterministic per machine/backend;
+* **coverage**: fail when a baseline row disappears from the fresh run
+  (new rows are fine — they become gated once committed).
+
+Updating the baselines (e.g. after an intentional perf trade-off, or when
+moving to a new reference machine) is explicit:
+
+    PYTHONPATH=src python tools/bench_gate.py --update
+    git add BENCH_*.json   # commit the new baselines with your PR
+
+``--candidate-dir`` skips the re-run and gates existing JSON (used to
+verify freshly emitted results, or to split run/compare across CI steps).
+Exit code 0 = green, 1 = regression (details on stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+#: suites gated by default (BENCH_<suite>.json); `scale` and `certify`
+#: carry exploratory sweeps and can be opted in via --suites
+DEFAULT_SUITES = ("batch", "time", "eps", "serve")
+
+
+def _load(path: str) -> dict[str, dict]:
+    """Row-by-name index of one BENCH_*.json (repro-bench-v1)."""
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != "repro-bench-v1":
+        raise SystemExit(f"{path}: unknown schema {payload.get('schema')!r}")
+    rows: dict[str, dict] = {}
+    for row in payload["results"]:
+        rows[row["name"]] = row
+    return rows
+
+
+def _emit_candidates(out_dir: str) -> None:
+    """Run the reduced benchmark suites into ``out_dir``."""
+    env = dict(os.environ)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(repo, "src"), env.get("PYTHONPATH")) if p
+    )
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--emit-json", out_dir],
+        check=True, cwd=repo, env=env,
+    )
+
+
+def compare(
+    baseline: dict[str, dict],
+    candidate: dict[str, dict],
+    *,
+    time_ratio: float = 1.25,
+    time_slack: float = 0.2,
+    rmae_slack: float = 1e-3,
+) -> list[str]:
+    """Failure messages for one suite ([] = green)."""
+    failures = []
+    for name, base in baseline.items():
+        cand = candidate.get(name)
+        if cand is None:
+            failures.append(f"{name}: row missing from fresh run")
+            continue
+        bt, ct = base["wall_time_s"], cand["wall_time_s"]
+        if ct > bt * time_ratio + time_slack:
+            failures.append(
+                f"{name}: wall time {ct:.3f}s vs baseline {bt:.3f}s "
+                f"(>{(time_ratio - 1) * 100:.0f}% regression)"
+            )
+        br, cr = base.get("rmae"), cand.get("rmae")
+        if br is not None and cr is not None:
+            if cr > br + max(abs(br) * rmae_slack, 1e-12):
+                failures.append(
+                    f"{name}: rmae {cr:.6f} vs baseline {br:.6f} "
+                    f"(accuracy regression)"
+                )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+    )
+    ap.add_argument("--baseline-dir", default=".",
+                    help="dir holding the committed BENCH_*.json")
+    ap.add_argument("--candidate-dir", default=None,
+                    help="pre-emitted fresh JSON; omit to re-run the suites")
+    ap.add_argument("--suites", default=",".join(DEFAULT_SUITES),
+                    help="comma list of BENCH_<suite>.json to gate")
+    ap.add_argument("--time-ratio", type=float, default=1.25)
+    ap.add_argument("--time-slack", type=float, default=0.2,
+                    help="absolute seconds ignored before the ratio check")
+    ap.add_argument("--rmae-slack", type=float, default=1e-3,
+                    help="relative RMAE float-noise allowance")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines from the fresh run instead "
+                         "of gating (then commit the new BENCH_*.json)")
+    args = ap.parse_args()
+    suites = [s.strip() for s in args.suites.split(",") if s.strip()]
+
+    tmp = None
+    cand_dir = args.candidate_dir
+    if cand_dir is None:
+        tmp = tempfile.mkdtemp(prefix="bench_gate_")
+        _emit_candidates(tmp)
+        cand_dir = tmp
+
+    try:
+        all_failures: list[str] = []
+        for suite in suites:
+            fname = f"BENCH_{suite}.json"
+            cand_path = os.path.join(cand_dir, fname)
+            base_path = os.path.join(args.baseline_dir, fname)
+            if not os.path.exists(cand_path):
+                all_failures.append(f"{fname}: fresh run produced no file")
+                continue
+            if args.update:
+                shutil.copyfile(cand_path, base_path)
+                print(f"updated {base_path}", file=sys.stderr)
+                continue
+            if not os.path.exists(base_path):
+                all_failures.append(
+                    f"{fname}: no committed baseline (run with --update "
+                    f"and commit it)"
+                )
+                continue
+            fails = compare(
+                _load(base_path), _load(cand_path),
+                time_ratio=args.time_ratio, time_slack=args.time_slack,
+                rmae_slack=args.rmae_slack,
+            )
+            tag = "OK" if not fails else f"{len(fails)} regression(s)"
+            print(f"bench gate {fname}: {tag}", file=sys.stderr)
+            all_failures += fails
+        if args.update:
+            return
+        if all_failures:
+            print("\nperf gate FAILED:", file=sys.stderr)
+            for msg in all_failures:
+                print(f"  - {msg}", file=sys.stderr)
+            print(
+                "\nIf the regression is intentional, refresh the baselines "
+                "with:\n  PYTHONPATH=src python tools/bench_gate.py --update"
+                "\nand commit the rewritten BENCH_*.json.",
+                file=sys.stderr,
+            )
+            raise SystemExit(1)
+        print("perf gate green", file=sys.stderr)
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

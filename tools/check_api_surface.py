@@ -87,13 +87,34 @@ def check_registry() -> list[str]:
     return errors
 
 
+def check_certify_surface() -> list[str]:
+    """Every registered solver — per-problem and batched — must take the
+    static ``certify`` option (the quality-certificate contract)."""
+    import inspect
+
+    from repro.batch import get_batched_solver
+    from repro.core.api.registry import method_accepts
+
+    errors: list[str] = []
+    for method in EXPECTED_METHODS:
+        if not method_accepts(method, "certify"):
+            errors.append(f"solver {method!r} does not accept certify=")
+    for method in EXPECTED_BATCHED:
+        params = inspect.signature(get_batched_solver(method)).parameters
+        if "certify" not in params:
+            errors.append(f"batched solver {method!r} does not accept certify=")
+    return errors
+
+
 def main() -> int:
     errors = [e for m in MODULES for e in check_module(m)]
     errors += check_registry()
+    errors += check_certify_surface()
     for e in errors:
         print(f"API SURFACE DRIFT: {e}", file=sys.stderr)
     if not errors:
-        print(f"api surface OK: {', '.join(MODULES)} + solver registry")
+        print(f"api surface OK: {', '.join(MODULES)} + solver registry "
+              "+ certify option surface")
     return 1 if errors else 0
 
 
