@@ -5,9 +5,10 @@ Full-size variants: ``python -m benchmarks.bench_<x> --full``.
 
 ``--emit-json [DIR]`` runs the machine-readable perf suites (batched
 dispatch + time-vs-n + matrix-free scaling + RMAE-vs-eps + sustained
-serving throughput + certificate tightness) and writes standardized
-``BENCH_batch.json`` / ``BENCH_time.json`` / ``BENCH_scale.json`` /
-``BENCH_eps.json`` / ``BENCH_serve.json`` / ``BENCH_certify.json``
+serving throughput + certificate tightness + robust serving under chaos)
+and writes standardized ``BENCH_batch.json`` / ``BENCH_time.json`` /
+``BENCH_scale.json`` / ``BENCH_eps.json`` / ``BENCH_serve.json`` /
+``BENCH_certify.json`` / ``BENCH_robust.json``
 (schema ``repro-bench-v1``: method, n, B, wall-time, RMAE per row) so the
 perf trajectory stays comparable across PRs — and gate-able by
 ``tools/bench_gate.py``.
@@ -25,6 +26,7 @@ def _emit_json(out_dir: str) -> None:
         bench_batch,
         bench_certify,
         bench_rmae_vs_eps,
+        bench_robust,
         bench_scale,
         bench_serve,
         bench_time,
@@ -52,6 +54,9 @@ def _emit_json(out_dir: str) -> None:
     bench_certify.run(n_rep=2)
     bench_certify.run(n_rep=2, lam=1.0)
     common.write_json(os.path.join(out_dir, "BENCH_certify.json"), "certify")
+    print("--- robust serving under chaos (JSON) ---", file=sys.stderr)
+    bench_robust.run()
+    common.write_json(os.path.join(out_dir, "BENCH_robust.json"), "robust")
 
 
 def main() -> None:

@@ -97,6 +97,23 @@ def main():
     print(f"  actual |value - dense| = {abs(float(sol.value) - truth):.2e}")
     print("diagnostics summary:", sol.diagnostics.summary())
 
+    # ---------------- robustness: the self-healing escalation ladder ------
+    # Corrupt the scaling-domain kernel (the chaos harness's injected
+    # fault: the plain solve exits `degenerate`), then let robust=True
+    # escalate to the clean log domain and recover. `.attempts` is the
+    # honest per-rung history.
+    from repro.robust import corrupt_scaling_kernel
+
+    small = OTProblem(Geometry.from_points(x[:200], normalize=True),
+                      a[:200] / a[:200].sum(), b[:200] / b[:200].sum(), eps)
+    broken = corrupt_scaling_kernel(small, jax.random.PRNGKey(2), mode="zero")
+    rsol = solve(broken, method="dense", robust=True)
+    print(f"robust solve recovered={rsol.recovered} "
+          f"(final status: {rsol.status_label})")
+    for t in rsol.attempts:
+        print(f"  attempt {t.index}: {t.action:>10s} via {t.method:<6s} "
+              f"eps={t.eps:g} -> {t.status} ({t.matvecs} matvecs)")
+
 
 if __name__ == "__main__":
     main()

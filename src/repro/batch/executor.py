@@ -158,6 +158,8 @@ class BucketedExecutor:
         *,
         method: str = "spar_sink_coo",
         keys: Sequence[jax.Array] | None = None,
+        robust: bool = False,
+        policy=None,
         **opts,
     ) -> list[Solution]:
         """Solve B problems; returns per-problem `Solution`s in input order.
@@ -167,8 +169,16 @@ class BucketedExecutor:
         static: ``s``/``cap`` drive the per-group sketch build, the rest
         (``tol``, ``max_iter``) are baked into the compiled program; the
         compile cache is keyed on (bucket shape, method, options).
+
+        ``robust=True`` post-inspects every element and runs the
+        `repro.robust` escalation ladder on the failed ones only — the
+        batched dispatch stays one compiled program, and only failures pay
+        for per-problem recovery solves. Returns
+        `repro.robust.RobustSolution`s (happy elements wrap their batched
+        `Solution` with a single-attempt history).
         """
         problems = list(problems)
+        ladder_opts = dict(opts) if (robust or policy is not None) else None
         if method in _NEEDS_KEY:
             if keys is None:
                 raise TypeError(f"method {method!r} requires per-problem keys")
@@ -235,6 +245,21 @@ class BucketedExecutor:
             )
             for j, i in enumerate(idxs):
                 out[i] = self._solution(method, problems[i], br, j, log_sparse)
+        if ladder_opts is not None:
+            from repro.robust.ladder import escalate_from
+
+            robust_out = []
+            for i, sol in enumerate(out):
+                opts_i = dict(ladder_opts)
+                if keys is not None:
+                    opts_i["key"] = keys[i]
+                robust_out.append(
+                    escalate_from(
+                        problems[i], method, sol,
+                        policy=policy, metrics=self.metrics, **opts_i,
+                    )
+                )
+            return robust_out  # type: ignore[return-value]
         return out  # type: ignore[return-value]
 
     @staticmethod

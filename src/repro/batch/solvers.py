@@ -338,6 +338,7 @@ def batched_sparse_log_loop(
     max_iter: int = 1000,
     patience: int = 100,
     trace: bool | int = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ):
     """Per-element-frozen mirror of
     :func:`repro.core.sinkhorn.generic_sparse_log_loop`: log-domain
@@ -346,15 +347,24 @@ def batched_sparse_log_loop(
     (covers dead rows *and* inert bucket padding, which starts pinned), and
     the scaling loop's stall detection on the column-marginal violation.
     Each element reproduces the per-problem trajectory exactly.
-    Returns ``(f, g, n_iter, err, status)``; ``trace`` (static) appends a
-    batched `repro.obs.SolverTrace`.
+    ``init=(f0, g0)`` — both (B, ·) — warm-starts the potentials exactly
+    like `generic_sparse_log_loop`'s ``init`` (non-finite entries -> 0,
+    then dead-atom pinning); the default ``None`` leaves the jaxpr
+    untouched. Returns ``(f, g, n_iter, err, status)``; ``trace`` (static)
+    appends a batched `repro.obs.SolverTrace`.
     """
     B, n = loga.shape
     m = logb.shape[1]
     neg_inf_a = jnp.isneginf(loga)
     neg_inf_b = jnp.isneginf(logb)
-    f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.zeros((B, n), loga.dtype))
-    g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.zeros((B, m), logb.dtype))
+    if init is None:
+        f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.zeros((B, n), loga.dtype))
+        g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.zeros((B, m), logb.dtype))
+    else:  # warm start: non-finite entries -> 0, then dead-atom pinning
+        f0 = jnp.asarray(init[0], loga.dtype)
+        g0 = jnp.asarray(init[1], logb.dtype)
+        f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.where(jnp.isfinite(f0), f0, 0.0))
+        g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.where(jnp.isfinite(g0), g0, 0.0))
     big = jnp.full((B,), jnp.finfo(loga.dtype).max, loga.dtype)
     scale = (fe * eps)[:, None]
     eps_col = eps[:, None]
@@ -925,6 +935,7 @@ def sparse_log_potentials(
     tol: float,
     max_iter: int,
     trace: bool | int = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ):
     """Log-domain potentials of B sketched problems — the ONE iteration
     kernel behind both the per-problem ``spar_sink_log`` /
@@ -964,7 +975,7 @@ def sparse_log_potentials(
 
     return batched_sparse_log_loop(
         lse_row, lse_col, loga, logb, eps, fe, tol=tol, max_iter=max_iter,
-        trace=trace,
+        trace=trace, init=init,
     )
 
 

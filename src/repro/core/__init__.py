@@ -97,6 +97,7 @@ from repro.core.sparsify import (
 )
 from repro.core.api import (
     Geometry,
+    InvalidProblem,
     OTProblem,
     PointCloudGeometry,
     Solution,
@@ -116,6 +117,7 @@ from repro.core.divergence import sinkhorn_divergence, spar_sink_divergence
 
 __all__ = [
     "Geometry",
+    "InvalidProblem",
     "OTProblem",
     "PointCloudGeometry",
     "STATUS_CONVERGED",

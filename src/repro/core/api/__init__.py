@@ -20,7 +20,7 @@ bitwise-reproducible against per-problem ``solve()`` for the same keys:
                                 keys=keys, s=8 * s0(n))
 """
 from repro.core.api.geometry import Geometry, PointCloudGeometry
-from repro.core.api.problems import OTProblem, UOTProblem
+from repro.core.api.problems import InvalidProblem, OTProblem, UOTProblem
 from repro.core.api.registry import (
     available_methods,
     get_solver,
@@ -41,6 +41,7 @@ from repro.core.api.solvers import (
 __all__ = [
     "DEFAULT_TOL",
     "Geometry",
+    "InvalidProblem",
     "OTProblem",
     "PointCloudGeometry",
     "Solution",

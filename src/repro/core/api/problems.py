@@ -14,14 +14,32 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
-from repro.core.api.geometry import Geometry
+from repro.core.api.geometry import Geometry, PointCloudGeometry
 from repro.core.sinkhorn import ot_cost_from_plan, uot_cost_from_plan
 
-__all__ = ["OTProblem", "UOTProblem"]
+__all__ = ["InvalidProblem", "OTProblem", "UOTProblem"]
+
+
+class InvalidProblem(ValueError):
+    """Problem data that cannot produce a meaningful solve.
+
+    Raised at `OTProblem`/`UOTProblem` construction (and as a backstop at
+    ``solve()`` entry) for NaN/negative/all-zero marginals, NaN or ``-inf``
+    costs, or a non-positive/non-finite ``eps`` — instead of letting the
+    NaN propagate through the loop and exit as ``non_finite`` after
+    ``max_iter`` wasted iterations. ``+inf`` costs are legitimate (blocked
+    pairs, e.g. WFR geometry beyond the cutoff) and pass. Construct with
+    ``validate=False`` to skip the checks (jit-traced callers skip
+    automatically — tracers carry no values to check).
+    """
 
 
 def _as_geometry(geom) -> Geometry:
     return geom if isinstance(geom, Geometry) else Geometry(jnp.asarray(geom))
+
+
+def _traced(*vals) -> bool:
+    return any(isinstance(v, jax.core.Tracer) for v in vals)
 
 
 @dataclass(eq=False)  # array fields: generated __eq__ would raise, not compare
@@ -32,11 +50,71 @@ class OTProblem:
     a: jax.Array
     b: jax.Array
     eps: float
+    #: construction-time input validation (`InvalidProblem` on bad data);
+    #: ``validate=False`` is the escape hatch for trusted/hot-path callers
+    validate: bool = field(default=True, kw_only=True, repr=False)
 
     def __post_init__(self):
         self.geom = _as_geometry(self.geom)
         self.a = jnp.asarray(self.a)
         self.b = jnp.asarray(self.b)
+        self._checked = False
+        if self.validate:
+            self.check_valid()
+
+    # ------------------------------------------------------------ validation
+
+    def check_valid(self) -> "OTProblem":
+        """Raise `InvalidProblem` on unsolvable inputs (see its docstring).
+
+        Runs the checks at most once per problem instance; no-ops when the
+        problem was built with ``validate=False`` (trusted) or when any
+        input is a jit tracer (nothing concrete to check). ``solve()``
+        calls this at entry, so hand-rolled `Solution`-free paths get the
+        same contract.
+        """
+        if self._checked or not self.validate:
+            return self
+        if _traced(self.a, self.b, self.eps):
+            return self
+        self._validate()
+        self._checked = True
+        return self
+
+    def _invalid(self, msg: str) -> None:
+        raise InvalidProblem(
+            f"{type(self).__name__}{self.shape}: {msg} "
+            "(pass validate=False to skip input validation)"
+        )
+
+    def _validate(self) -> None:
+        eps = float(self.eps)
+        if not math.isfinite(eps) or eps <= 0:
+            self._invalid(f"eps must be finite and > 0, got {eps}")
+        for name, w in (("a", self.a), ("b", self.b)):
+            if not bool(jnp.all(jnp.isfinite(w))):
+                self._invalid(f"marginal {name!r} has non-finite entries")
+            if bool(jnp.any(w < 0)):
+                self._invalid(f"marginal {name!r} has negative entries")
+            if not bool(jnp.sum(w) > 0):
+                self._invalid(f"marginal {name!r} carries no mass (all zero)")
+        geom = self.geom
+        if isinstance(geom, PointCloudGeometry):
+            # never materialize the (possibly guarded) dense cost: finite
+            # support points imply finite sqeuclidean/WFR costs
+            for name, pts in (("x", geom.x), ("y", geom.y)):
+                if _traced(pts):
+                    return
+                if not bool(jnp.all(jnp.isfinite(pts))):
+                    self._invalid(f"point cloud {name!r} has non-finite entries")
+        else:
+            cost = geom.cost
+            if _traced(cost):
+                return
+            # +inf = blocked pair (legitimate, e.g. WFR cutoff); NaN and
+            # -inf poison the kernel
+            if bool(jnp.any(jnp.isnan(cost) | jnp.isneginf(cost))):
+                self._invalid("cost matrix has NaN or -inf entries")
 
     @property
     def shape(self) -> tuple[int, int]:
@@ -67,6 +145,13 @@ class UOTProblem(OTProblem):
     """Unbalanced entropic OT with marginal penalty ``lam`` (paper eq. 10)."""
 
     lam: float = field(default=1.0)
+
+    def _validate(self) -> None:
+        if not _traced(self.lam):
+            lam = float(self.lam)
+            if math.isnan(lam) or lam <= 0:  # lam = +inf is the balanced limit
+                self._invalid(f"lam must be > 0 (inf = balanced), got {lam}")
+        super()._validate()
 
     @property
     def is_balanced(self) -> bool:

@@ -78,13 +78,31 @@ def method_accepts(method: str, option: str) -> bool:
     return option in params
 
 
-def solve(problem: OTProblem, method: str = "dense", **opts) -> Solution:
+def solve(
+    problem: OTProblem,
+    method: str = "dense",
+    *,
+    robust: bool = False,
+    policy=None,
+    **opts,
+) -> Solution:
     """Solve an `OTProblem`/`UOTProblem` with a registered method.
 
     Common options: ``tol``, ``max_iter``. Sketching methods additionally
     take ``key`` (PRNG) and ``s`` (expected sketch size); see each solver's
     docstring in :mod:`repro.core.api.solvers`.
+
+    ``robust=True`` runs the same solve under the self-healing escalation
+    ladder (`repro.robust.solve_robust`) and returns a
+    `repro.robust.RobustSolution` — attempt 0 is this exact solve, so a
+    converged first attempt is bitwise-identical to ``robust=False``.
+    ``policy`` (an `repro.robust.EscalationPolicy`) tunes the ladder.
     """
+    if robust or policy is not None:
+        from repro.robust.ladder import solve_robust
+
+        return solve_robust(problem, method, policy=policy, **opts)
+    problem.check_valid()
     fn = get_solver(method)
     params = inspect.signature(fn).parameters
     if not any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):

@@ -440,18 +440,26 @@ def _solve_log(
     max_iter: int = 1000,
     trace: bool | int = False,
     certify: bool = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ) -> Solution:
-    """Log-domain Sinkhorn on dual potentials (survives ``eps`` down to 1e-3)."""
+    """Log-domain Sinkhorn on dual potentials (survives ``eps`` down to 1e-3).
+
+    ``init=(f0, g0)`` warm-starts the potentials — e.g. re-tightening at
+    the original ``eps`` from an eps-bumped solve (the escalation ladder's
+    stall recovery); ``init=None`` (default) is the cold start and changes
+    nothing in the compiled program.
+    """
     logK = problem.log_kernel()
     eps = float(problem.eps)
     if problem.fe == 1.0:
         res = sinkhorn_log(
-            logK, problem.a, problem.b, eps, tol=tol, max_iter=max_iter, trace=trace
+            logK, problem.a, problem.b, eps, tol=tol, max_iter=max_iter,
+            trace=trace, init=init,
         )
     else:
         res = sinkhorn_uot_log(
             logK, problem.a, problem.b, float(problem.lam), eps, tol=tol,
-            max_iter=max_iter, trace=trace,
+            max_iter=max_iter, trace=trace, init=init,
         )
     T = plan_from_potentials(res.u, logK, res.v, eps)
     value = problem.objective(T)
@@ -558,7 +566,9 @@ def _coo_solution(
 
 
 def _sparse_log_loop(
-    problem: OTProblem, sk, tol: float, max_iter: int, trace: bool | int = False
+    problem: OTProblem, sk, tol: float, max_iter: int,
+    trace: bool | int = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ):
     """Run the sorted-COO segment-logsumexp iteration on a log-space sketch.
 
@@ -590,6 +600,7 @@ def _sparse_log_loop(
         tol=tol,
         max_iter=max_iter,
         trace=trace,
+        init=(init[0][None], init[1][None]) if init is not None else None,
     )
     f, g, t, err, status = res[:5]
     tr = None
@@ -647,6 +658,7 @@ def _solve_spar_sink_log(
     max_iter: int = 1000,
     trace: bool | int = False,
     certify: bool = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ) -> Solution:
     """**Log-domain** Spar-Sink (paper Alg. 3/4), safe for small ``eps``.
 
@@ -662,7 +674,7 @@ def _solve_spar_sink_log(
     sk, c_e = build_coo_log_sketch(
         problem, key, s, cap=cap, probs=probs, shrinkage=shrinkage
     )
-    res = _sparse_log_loop(problem, sk, tol, max_iter, trace)
+    res = _sparse_log_loop(problem, sk, tol, max_iter, trace, init=init)
     value = _coo_log_value(problem, sk, c_e, res)
     cert = None
     if certify:
@@ -687,6 +699,7 @@ def _solve_spar_sink_mf(
     max_iter: int = 1000,
     trace: bool | int = False,
     certify: bool = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ) -> Solution:
     """Matrix-free Spar-Sink: Õ(n) end to end, no (n, m) array anywhere.
 
@@ -714,12 +727,17 @@ def _solve_spar_sink_mf(
     ``spar_sink_log`` support instead.
     """
     geom = _mf_geometry(problem)
+    if init is not None and not stabilize:
+        raise ValueError(
+            "init= (warm-started potentials) requires the log-domain "
+            "stabilize=True path"
+        )
     if stabilize:
         if shared_variates:
             sk, c_e = build_coo_log_sketch(problem, key, s, cap=cap)
         else:
             sk, c_e = build_mf_log_sketch(problem, key, s, cap=cap)
-        res = _sparse_log_loop(problem, sk, tol, max_iter, trace)
+        res = _sparse_log_loop(problem, sk, tol, max_iter, trace, init=init)
         value = _coo_log_value(problem, sk, c_e, res)
         cert = None
         if certify:

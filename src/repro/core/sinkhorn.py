@@ -211,6 +211,7 @@ def generic_log_loop(
     tol: float = 1e-9,
     max_iter: int = 1000,
     trace: bool | int = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ) -> SinkhornResult:
     """Log-domain Sinkhorn on dual potentials ``f = eps log u``, ``g = eps log v``.
 
@@ -219,14 +220,26 @@ def generic_log_loop(
     Stopping is on ``max|f - f_prev| + max|g - g_prev| <= tol`` (potential
     oscillation — the log-domain analogue of the paper's L1 rule).
 
+    ``init=(f0, g0)`` warm-starts the potentials (e.g. re-tightening at a
+    smaller ``eps`` from an eps-bumped solve — the escalation ladder's
+    stall recovery); non-finite init entries fall back to 0, so ``-inf``
+    dead-atom pins from a previous solve can't wedge the stopping rule.
+    The default ``init=None`` adds no equations to the jaxpr.
+
     This loop doesn't need a marginal for its stopping rule, so ``trace``
     (static) additionally computes the column-marginal violation
     ``sum|exp(g/eps + lse_col(f_new)) - b|`` for the ring buffer; with the
     default ``trace=False`` no marginal is computed at all.
     """
     n, m = loga.shape[0], logb.shape[0]
-    f0 = jnp.zeros((n,), loga.dtype)
-    g0 = jnp.zeros((m,), logb.dtype)
+    if init is None:
+        f0 = jnp.zeros((n,), loga.dtype)
+        g0 = jnp.zeros((m,), logb.dtype)
+    else:
+        f0 = jnp.asarray(init[0], loga.dtype)
+        g0 = jnp.asarray(init[1], logb.dtype)
+        f0 = jnp.where(jnp.isfinite(f0), f0, 0.0)
+        g0 = jnp.where(jnp.isfinite(g0), g0, 0.0)
     neg_inf_a = jnp.isneginf(loga)
     neg_inf_b = jnp.isneginf(logb)
     if trace:
@@ -255,10 +268,10 @@ def generic_log_loop(
             out += (record_iteration(state[4], t, err, marg),)
         return out
 
-    init = (f0, g0, jnp.array(0, jnp.int32), jnp.array(jnp.inf, loga.dtype))
+    state0 = (f0, g0, jnp.array(0, jnp.int32), jnp.array(jnp.inf, loga.dtype))
     if trace:
-        init += (empty_trace(resolve_trace_len(trace), loga.dtype),)
-    final = jax.lax.while_loop(cond, body, init)
+        state0 += (empty_trace(resolve_trace_len(trace), loga.dtype),)
+    final = jax.lax.while_loop(cond, body, state0)
     f, g, t, err = final[:4]
     return SinkhornResult(
         f, g, t, err, _log_domain_status(f, g, err, tol),
@@ -297,6 +310,7 @@ def generic_sparse_log_loop(
     max_iter: int = 1000,
     patience: int = 100,
     trace: bool | int = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ) -> SinkhornResult:
     """Log-domain Sinkhorn on a *sparse* (sketched) kernel.
 
@@ -322,8 +336,14 @@ def generic_sparse_log_loop(
     # jump would otherwise register as an infinite err, and — in the batched
     # mirror of this loop — make inert bucket padding visible in the
     # stopping rule, breaking bitwise parity with the per-problem solve
-    f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.zeros((n,), loga.dtype))
-    g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.zeros((m,), logb.dtype))
+    if init is None:
+        f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.zeros((n,), loga.dtype))
+        g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.zeros((m,), logb.dtype))
+    else:  # warm start (see `generic_log_loop`); non-finite entries -> 0
+        f0 = jnp.asarray(init[0], loga.dtype)
+        g0 = jnp.asarray(init[1], logb.dtype)
+        f0 = jnp.where(neg_inf_a, -jnp.inf, jnp.where(jnp.isfinite(f0), f0, 0.0))
+        g0 = jnp.where(neg_inf_b, -jnp.inf, jnp.where(jnp.isfinite(g0), g0, 0.0))
     big = jnp.array(jnp.finfo(loga.dtype).max, loga.dtype)
     b_lin = jnp.exp(logb)  # loop-invariant (matches the batched mirror)
 
@@ -442,8 +462,12 @@ def sinkhorn_log(
     tol: float = 1e-9,
     max_iter: int = 1000,
     trace: bool | int = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ) -> SinkhornResult:
-    """Log-domain Algorithm 1; returns potentials ``(f, g)``."""
+    """Log-domain Algorithm 1; returns potentials ``(f, g)``.
+
+    ``init=(f0, g0)`` warm-starts the potentials (see `generic_log_loop`).
+    """
     loga, logb = _masked_log(a), _masked_log(b)
     return generic_log_loop(
         _dense_lse_row(logK, eps),
@@ -455,6 +479,7 @@ def sinkhorn_log(
         tol=tol,
         max_iter=max_iter,
         trace=trace,
+        init=init,
     )
 
 
@@ -469,6 +494,7 @@ def sinkhorn_uot_log(
     tol: float = 1e-9,
     max_iter: int = 1000,
     trace: bool | int = False,
+    init: tuple[jax.Array, jax.Array] | None = None,
 ) -> SinkhornResult:
     """Log-domain Algorithm 2; returns potentials ``(f, g)``."""
     fe = lam / (lam + eps)
@@ -483,6 +509,7 @@ def sinkhorn_uot_log(
         tol=tol,
         max_iter=max_iter,
         trace=trace,
+        init=init,
     )
 
 

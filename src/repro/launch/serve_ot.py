@@ -29,11 +29,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.batch import BucketedExecutor
+from repro.batch.problems import bucket_shape
 from repro.core import Geometry, OTProblem, PointCloudGeometry, UOTProblem, s0, solve
 from repro.core.api.solution import Solution
 from repro.obs.metrics import MetricsRegistry
+from repro.robust.breaker import BreakerPolicy, CircuitBreaker
 
-__all__ = ["OTRequest", "OTServer", "RequestTimeout"]
+__all__ = [
+    "CircuitOpen",
+    "OTRequest",
+    "OTServer",
+    "RequestTimeout",
+    "ServerOverloaded",
+    "UnrecoverableSolve",
+]
 
 
 class RequestTimeout(TimeoutError):
@@ -41,8 +50,39 @@ class RequestTimeout(TimeoutError):
 
     Set as the exception of the request's future (so ``future.result()``
     raises it) instead of leaving the future forever unresolved; each
-    expiry also bumps the ``ot_server_timeouts_total`` counter.
+    expiry also bumps the ``ot_server_timeouts_total`` counter. Expiry is
+    checked both when a batch is collected *and* again at dispatch time, so
+    a request that aged out while earlier groups dispatched is dropped
+    instead of solved past its deadline.
     """
+
+
+class ServerOverloaded(RuntimeError):
+    """Typed load-shed: ``submit()`` refused because the bounded queue
+    (``max_queue``) is full. Counted in ``ot_shed_total``. Back off and
+    resubmit — nothing was enqueued."""
+
+
+class CircuitOpen(RuntimeError):
+    """Typed load-shed: the `(bucket, method)` circuit breaker is OPEN, so
+    the request was failed immediately instead of burning a dispatch on a
+    known-bad compiled-program family. Counted in ``ot_shed_total``."""
+
+
+class UnrecoverableSolve(RuntimeError):
+    """A ``robust=True`` dispatch ran the full escalation ladder and still
+    could not produce an acceptable solution. Carries the honest history:
+    ``.solution`` is the `repro.robust.RobustSolution` (best attempt +
+    every rung tried) — never silently returned as if it had converged."""
+
+    def __init__(self, solution):
+        self.solution = solution
+        att = getattr(solution, "attempts", ())
+        last = att[-1].status if att else None
+        super().__init__(
+            f"escalation ladder exhausted after {len(att)} attempt(s); "
+            f"final status: {last!r}"
+        )
 
 
 @dataclass
@@ -55,7 +95,10 @@ class OTRequest:
     opts: dict
     timeout_s: float | None = None
     future: "Future[Solution]" = field(default_factory=Future)
+    #: stamped by ``submit()`` with the server's (injectable) clock
     t_submit: float = field(default_factory=time.perf_counter)
+    #: True when the over-watermark degradation overrides were applied
+    degraded: bool = False
 
 
 class OTServer:
@@ -77,6 +120,32 @@ class OTServer:
     ``ot_cert_ci_width_p95`` gauges; requests expiring past their
     ``timeout_s`` bump ``ot_server_timeouts_total`` and fail their future
     with `RequestTimeout`.
+
+    Hardening knobs (all off by default — the default server behaves
+    exactly as before):
+
+    * ``max_queue`` bounds the request queue; a full queue makes
+      ``submit()`` raise `ServerOverloaded` instead of enqueueing
+      (``ot_shed_total``).
+    * ``degrade_watermark`` + ``degrade`` apply option overrides (e.g.
+      ``{"certify": False, "max_iter": 500}``) to requests submitted while
+      the queue depth is at or past the watermark — graceful degradation
+      under load (``ot_degraded_total``; ``OTRequest.degraded`` marks them).
+    * ``max_retries``/``backoff_s`` retry a failed dispatch with
+      exponential backoff before failing its futures (``ot_retries_total``).
+    * ``breaker`` (a `repro.robust.BreakerPolicy`) arms one
+      `repro.robust.CircuitBreaker` per `(bucket, method)` compiled-program
+      family: after ``failure_threshold`` consecutive dispatch failures the
+      family's requests are shed with `CircuitOpen` until a half-open probe
+      succeeds (``ot_breaker_state`` gauges, ``ot_breaker_open`` count).
+    * ``robust``/``policy`` run every dispatch under the `repro.robust`
+      escalation ladder; recovered requests resolve to a
+      `repro.robust.RobustSolution`, unrecoverable ones fail with
+      `UnrecoverableSolve` — a degenerate result is never returned as a
+      success.
+    * ``clock``/``sleep`` are injectable for deterministic tests (the chaos
+      harness's `repro.robust.SkewedClock` drives expiry and breaker
+      timeouts without real waits).
     """
 
     def __init__(
@@ -86,11 +155,32 @@ class OTServer:
         max_batch: int = 16,
         deadline_s: float = 0.02,
         metrics: MetricsRegistry | None = None,
+        max_queue: int | None = None,
+        degrade_watermark: int | None = None,
+        degrade: dict | None = None,
+        max_retries: int = 0,
+        backoff_s: float = 0.05,
+        breaker: BreakerPolicy | None = None,
+        robust: bool = False,
+        policy=None,
+        clock=time.perf_counter,
+        sleep=time.sleep,
     ):
         self.executor = executor or BucketedExecutor()
         self.max_batch = max_batch
         self.deadline_s = deadline_s
         self.metrics = metrics if metrics is not None else self.executor.metrics
+        self.max_queue = max_queue
+        self.degrade_watermark = degrade_watermark
+        self.degrade = dict(degrade) if degrade else {}
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.breaker_policy = breaker
+        self.robust = robust or policy is not None
+        self.policy = policy
+        self._clock = clock
+        self._sleep = sleep
+        self._breakers: dict[tuple, CircuitBreaker] = {}
         self._queue: "queue.Queue[OTRequest | None]" = queue.Queue()
         self._thread: threading.Thread | None = None
         self.batches_dispatched = 0
@@ -136,8 +226,31 @@ class OTServer:
         that long after submit fails with `RequestTimeout` instead of
         occupying a batch slot (and is counted in
         ``ot_server_timeouts_total``).
+
+        With a bounded queue (``max_queue``), a full queue raises
+        `ServerOverloaded` here — synchronous backpressure, nothing is
+        enqueued. Past ``degrade_watermark``, the server's ``degrade``
+        option overrides are merged into ``opts`` before enqueueing.
         """
-        req = OTRequest(problem, method, key, opts, timeout_s=timeout_s)
+        depth = self._queue.qsize()
+        if self.max_queue is not None and depth >= self.max_queue:
+            self.metrics.counter("ot_shed_total")
+            raise ServerOverloaded(
+                f"queue full ({depth} >= max_queue={self.max_queue})"
+            )
+        degraded = False
+        if (
+            self.degrade_watermark is not None
+            and depth >= self.degrade_watermark
+            and self.degrade
+        ):
+            opts = {**opts, **self.degrade}
+            degraded = True
+            self.metrics.counter("ot_degraded_total")
+        req = OTRequest(
+            problem, method, key, opts, timeout_s=timeout_s, degraded=degraded
+        )
+        req.t_submit = self._clock()
         self._queue.put(req)
         self.metrics.gauge("serve.queue_depth", float(self._queue.qsize()))
         return req.future
@@ -157,7 +270,7 @@ class OTServer:
         batch = [first]
         deadline = first.t_submit + self.deadline_s
         while len(batch) < self.max_batch:
-            timeout = deadline - time.perf_counter()
+            timeout = deadline - self._clock()
             try:
                 nxt = (
                     self._queue.get_nowait()
@@ -193,7 +306,7 @@ class OTServer:
     def _expire(self, batch: list[OTRequest]) -> list[OTRequest]:
         """Fail requests whose queue wait exceeded their ``timeout_s`` with
         `RequestTimeout`; returns the still-live remainder."""
-        now = time.perf_counter()
+        now = self._clock()
         live = []
         for r in batch:
             if r.timeout_s is not None and now - r.t_submit > r.timeout_s:
@@ -208,21 +321,85 @@ class OTServer:
         return live
 
     def _dispatch(self, method: str, reqs: list[OTRequest]) -> None:
-        try:
-            keys = None
-            if all(r.key is not None for r in reqs):
-                keys = [r.key for r in reqs]
-            sols = self.executor.solve_batch(
-                [r.problem for r in reqs],
-                method=method,
-                keys=keys,
-                **reqs[0].opts,
-            )
-        except Exception as e:  # noqa: BLE001 — fail the requests, not the loop
-            for r in reqs:
-                r.future.set_exception(e)
+        # re-check expiry at dispatch time: a request may have aged out while
+        # earlier groups of the same batch dispatched ahead of it
+        reqs = self._expire(reqs)
+        if not reqs:
             return
-        now = time.perf_counter()
+        if self.breaker_policy is None:
+            self._dispatch_group(method, reqs)
+            return
+        # breaker families are per (shape bucket, method) — one compiled
+        # program each — so a poisoned family sheds alone instead of
+        # dragging healthy buckets down with it
+        by_bucket: dict[tuple, list[OTRequest]] = {}
+        for r in reqs:
+            n, m = r.problem.shape
+            b = bucket_shape(n, m, min_size=self.executor.min_bucket)
+            by_bucket.setdefault(b, []).append(r)
+        for bucket, group in by_bucket.items():
+            brk = self._breakers.setdefault(
+                (bucket, method),
+                CircuitBreaker(self.breaker_policy, clock=self._clock),
+            )
+            if not brk.allow():
+                self.metrics.counter("ot_shed_total", float(len(group)))
+                for r in group:
+                    if not r.future.cancelled():
+                        r.future.set_exception(CircuitOpen(
+                            f"breaker open: bucket={bucket}, method={method!r}"
+                        ))
+                self._breaker_gauges(bucket, method, brk)
+                continue
+            ok = self._dispatch_group(method, group)
+            (brk.record_success if ok else brk.record_failure)()
+            self._breaker_gauges(bucket, method, brk)
+
+    def _breaker_gauges(self, bucket: tuple, method: str, brk: CircuitBreaker) -> None:
+        self.metrics.gauge(
+            f"ot_breaker_state:{method}:{bucket[0]}x{bucket[1]}",
+            float(brk.state),
+        )
+        self.metrics.gauge(
+            "ot_breaker_open",
+            float(sum(
+                1 for b in self._breakers.values() if b.state == CircuitBreaker.OPEN
+            )),
+        )
+
+    def _dispatch_group(self, method: str, reqs: list[OTRequest]) -> bool:
+        """One executor dispatch with retry-with-backoff; True on success.
+
+        On failure each retry bumps ``ot_retries_total`` and sleeps
+        ``backoff_s * 2**attempt`` (injectable ``sleep``); the final failure
+        fails every request's future with the dispatch exception.
+        """
+        keys = None
+        if all(r.key is not None for r in reqs):
+            keys = [r.key for r in reqs]
+        problems = [r.problem for r in reqs]
+        attempt = 0
+        while True:
+            try:
+                sols = self.executor.solve_batch(
+                    problems,
+                    method=method,
+                    keys=keys,
+                    robust=self.robust,
+                    policy=self.policy,
+                    **reqs[0].opts,
+                )
+                break
+            except Exception as e:  # noqa: BLE001 — fail the requests, not the loop
+                if attempt >= self.max_retries:
+                    for r in reqs:
+                        if not r.future.cancelled():
+                            r.future.set_exception(e)
+                    return False
+                self.metrics.counter("ot_retries_total")
+                self._sleep(self.backoff_s * (2 ** attempt))
+                attempt += 1
+        now = self._clock()
         # one locked block: the counters, the fill/latency histograms, and
         # the legacy attributes move together, so a concurrent reset_stats()
         # or stats() never sees a half-recorded dispatch
@@ -259,7 +436,13 @@ class OTServer:
                     self.metrics.get_histogram("serve.cert_ci_width")["p95"],
                 )
         for r, sol in zip(reqs, sols):
-            r.future.set_result(sol)
+            if self.robust and not sol.recovered:
+                # the ladder ran dry: surface the honest history as a typed
+                # failure — never a degenerate result dressed up as success
+                r.future.set_exception(UnrecoverableSolve(sol))
+            else:
+                r.future.set_result(sol)
+        return True
 
     # --------------------------------------------------------------- stats
 
@@ -324,6 +507,8 @@ def main() -> None:
     ap.add_argument("--sizes", default="96,128,200,256")
     ap.add_argument("--s-mult", type=float, default=8.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--robust", action="store_true",
+                    help="serve under the repro.robust escalation ladder")
     ap.add_argument("--serial", action="store_true",
                     help="also time the stream as per-problem solve() calls")
     ap.add_argument("--no-warmup", action="store_true",
@@ -344,7 +529,8 @@ def main() -> None:
     keys = [jax.random.PRNGKey(i) for i in range(args.requests)]
 
     server = OTServer(
-        max_batch=args.max_batch, deadline_s=args.deadline_ms / 1e3
+        max_batch=args.max_batch, deadline_s=args.deadline_ms / 1e3,
+        robust=args.robust,
     )
 
     def run_stream():

@@ -1,0 +1,36 @@
+"""Self-healing solves: escalation ladder, circuit breakers, chaos harness.
+
+``solve_robust`` (or ``robust=True`` on `repro.core.api.solve` and the
+serving stack) wraps a solve in the deterministic escalation ladder of
+:mod:`repro.robust.ladder`; :mod:`repro.robust.breaker` supplies the
+serving-layer circuit breakers; :mod:`repro.robust.chaos` is the
+key-seeded fault-injection harness the whole package is tested under.
+"""
+from repro.robust.breaker import BREAKER_STATES, BreakerPolicy, CircuitBreaker
+from repro.robust.chaos import (
+    ChaosGeometry,
+    FlakyExecutor,
+    InjectedFault,
+    SkewedClock,
+    corrupt_scaling_kernel,
+    undersized_cap,
+)
+from repro.robust.ladder import escalate_from, solve_robust
+from repro.robust.policy import Attempt, EscalationPolicy, RobustSolution
+
+__all__ = [
+    "Attempt",
+    "BREAKER_STATES",
+    "BreakerPolicy",
+    "ChaosGeometry",
+    "CircuitBreaker",
+    "EscalationPolicy",
+    "FlakyExecutor",
+    "InjectedFault",
+    "RobustSolution",
+    "SkewedClock",
+    "corrupt_scaling_kernel",
+    "escalate_from",
+    "solve_robust",
+    "undersized_cap",
+]

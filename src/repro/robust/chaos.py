@@ -1,0 +1,155 @@
+"""Deterministic, key-seeded fault injectors (the chaos harness).
+
+The escalation ladder and the hardened server are tested against
+*induced* failures, not hoped-for ones. Every injector here is a pure
+function of its PRNG key (or an explicit schedule) — rerunning a chaos
+test replays byte-identical faults:
+
+* `ChaosGeometry` / `corrupt_scaling_kernel` — the scaling-domain Gibbs
+  kernel ``K = exp(-C/eps)`` comes back corrupted (a key-chosen NaN row,
+  or all zeros, the underflow image), while ``log_kernel``/``cost`` stay
+  clean. This is exactly the failure family the ladder's log-domain
+  rescue genuinely fixes, so recovery is testable end to end.
+* `undersized_cap` — a sketch ``cap`` far below the expected draw, forcing
+  ``Solution.overflowed`` (the ladder re-sketches with doubled cap).
+* `FlakyExecutor` + `InjectedFault` — wraps a `BucketedExecutor`; dispatch
+  ``t`` raises deterministically per ``bernoulli(fold_in(key, t), rate)``
+  (or an explicit ``fail_calls`` schedule). Exercises the server's
+  retry-with-backoff and circuit breakers.
+* `SkewedClock` — an injectable monotonic clock whose ``advance()`` jumps
+  time between server phases; regression-tests dispatch-time expiry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api.geometry import Geometry
+from repro.core.api.problems import OTProblem
+
+__all__ = [
+    "ChaosGeometry",
+    "FlakyExecutor",
+    "InjectedFault",
+    "SkewedClock",
+    "corrupt_scaling_kernel",
+    "undersized_cap",
+]
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected failure (never raised by healthy code)."""
+
+
+class ChaosGeometry(Geometry):
+    """Geometry whose scaling-domain kernel is corrupted, log domain clean.
+
+    ``mode="nan"`` poisons one key-chosen row of ``K`` with NaN (the
+    iterates go non-finite at the first matvec); ``mode="zero"`` returns
+    an all-zero kernel (the small-eps underflow image — the solve exits
+    ``degenerate``). ``log_kernel()`` and ``cost`` delegate to the clean
+    base geometry, so the ladder's log-domain escalation actually
+    recovers, and sketch builders that read ``cost`` directly
+    (``spar_sink_log``) see clean data.
+    """
+
+    def __init__(self, base: Geometry, key: jax.Array, *, mode: str = "nan"):
+        if mode not in ("nan", "zero"):
+            raise ValueError(f"unknown chaos mode {mode!r}; use 'nan' or 'zero'")
+        super().__init__(base.cost, scale=base.scale, cache_size=base.cache_size)
+        self.base = base
+        self.key = key
+        self.mode = mode
+
+    def kernel(self, eps: float) -> jax.Array:
+        K = self.base.kernel(eps)
+        if self.mode == "zero":
+            return jnp.zeros_like(K)
+        row = jax.random.randint(self.key, (), 0, K.shape[0])
+        return K.at[row].set(jnp.nan)
+
+    def log_kernel(self, eps: float) -> jax.Array:
+        return self.base.log_kernel(eps)
+
+
+def corrupt_scaling_kernel(
+    problem: OTProblem, key: jax.Array, *, mode: str = "nan"
+) -> OTProblem:
+    """Same problem on a `ChaosGeometry` (scaling-domain solves will fail)."""
+    return dataclasses.replace(problem, geom=ChaosGeometry(problem.geom, key, mode=mode))
+
+
+def undersized_cap(s: float, *, factor: int = 8) -> int:
+    """A sketch capacity ~``factor``x below the expected draw ``E[nnz] = s``
+    — overflow is (deterministically, for any reasonable draw) certain;
+    the ladder's ``cap_growth`` doubling needs ~log2(factor)+1 re-sketches
+    to clear it."""
+    return max(4, int(float(s)) // factor)
+
+
+class FlakyExecutor:
+    """`BucketedExecutor` wrapper that fails dispatches deterministically.
+
+    Call ``t`` (0-indexed, counted across the wrapper's lifetime) raises
+    `InjectedFault` when ``t`` is in ``fail_calls``, or — with
+    ``fail_rate`` — when ``bernoulli(fold_in(key, t), fail_rate)`` fires.
+    Everything else (metrics, ``compile_count``, ``min_bucket``, …)
+    delegates to the wrapped executor, so the server cannot tell the
+    difference until the fault fires.
+    """
+
+    def __init__(
+        self,
+        executor,
+        *,
+        key: jax.Array | None = None,
+        fail_rate: float = 0.0,
+        fail_calls: Iterable[int] = (),
+    ):
+        if fail_rate > 0.0 and key is None:
+            raise ValueError("fail_rate needs a PRNG key for determinism")
+        self._executor = executor
+        self._key = key
+        self._rate = float(fail_rate)
+        self._fail_calls = frozenset(fail_calls)
+        self.calls = 0
+        self.faults = 0
+
+    def solve_batch(self, *args, **kwargs):
+        t = self.calls
+        self.calls += 1
+        fail = t in self._fail_calls
+        if not fail and self._rate > 0.0:
+            fail = bool(
+                jax.random.bernoulli(jax.random.fold_in(self._key, t), self._rate)
+            )
+        if fail:
+            self.faults += 1
+            raise InjectedFault(f"injected dispatch failure (call #{t})")
+        return self._executor.solve_batch(*args, **kwargs)
+
+    def __getattr__(self, name: str):
+        return getattr(self._executor, name)
+
+
+class SkewedClock:
+    """Injectable monotonic clock: ``clock() = base() + skew``.
+
+    ``advance(dt)`` jumps the skew — e.g. *between* a server's drain and
+    dispatch phases — so expiry paths that compare against "now" are
+    testable without real sleeps or racy thread timing.
+    """
+
+    def __init__(self, base: Callable[[], float] = time.perf_counter):
+        self._base = base
+        self._skew = 0.0
+
+    def __call__(self) -> float:
+        return self._base() + self._skew
+
+    def advance(self, dt: float) -> None:
+        self._skew += float(dt)

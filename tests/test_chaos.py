@@ -1,0 +1,307 @@
+"""Chaos harness + serving hardening (ISSUE 9): deterministic fault
+injection, bounded-queue shedding, dispatch-time expiry under a skewed
+clock, retry-with-backoff, circuit breakers, and the end-to-end acceptance
+run — >= 95% of requests recover to converged under ~10% injected faults,
+the rest fail with typed errors, and no degenerate result is ever returned
+as a success."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.robust as rb
+from repro.batch import BucketedExecutor
+from repro.core import Geometry, OTProblem
+from repro.launch.serve_ot import (
+    CircuitOpen,
+    OTRequest,
+    OTServer,
+    RequestTimeout,
+    ServerOverloaded,
+    UnrecoverableSolve,
+)
+from repro.obs.metrics import MetricsRegistry
+
+EPS = 0.05
+
+
+def _problem(n=32, m=32, eps=EPS, seed=0):
+    rng = np.random.default_rng(seed)
+    C = jnp.asarray(rng.random((n, m)))
+    return OTProblem(Geometry(C), jnp.ones(n) / n, jnp.ones(m) / m, eps)
+
+
+def _request(problem, method="dense", key=None, timeout_s=None, **opts):
+    opts.setdefault("tol", 1e-7)
+    opts.setdefault("max_iter", 2000)
+    return OTRequest(problem, method, key, opts, timeout_s=timeout_s)
+
+
+def _server(**kw):
+    kw.setdefault("executor", BucketedExecutor(metrics=MetricsRegistry()))
+    return OTServer(**kw)
+
+
+# --------------------------------------------------------------------------
+# Injectors are deterministic
+# --------------------------------------------------------------------------
+
+
+def test_skewed_clock():
+    clock = rb.SkewedClock(base=lambda: 100.0)
+    assert clock() == 100.0
+    clock.advance(2.5)
+    clock.advance(1.0)
+    assert clock() == pytest.approx(103.5)
+
+
+def test_chaos_geometry_corrupts_only_scaling_kernel():
+    base = Geometry(jnp.asarray(np.random.default_rng(0).random((16, 16))))
+    zero = rb.ChaosGeometry(base, jax.random.PRNGKey(0), mode="zero")
+    assert bool(jnp.all(zero.kernel(EPS) == 0.0))
+    nan = rb.ChaosGeometry(base, jax.random.PRNGKey(0), mode="nan")
+    K = nan.kernel(EPS)
+    assert bool(jnp.isnan(K).any()) and not bool(jnp.isnan(K).all())
+    for g in (zero, nan):
+        assert bool(jnp.array_equal(g.log_kernel(EPS), base.log_kernel(EPS)))
+        assert bool(jnp.array_equal(g.cost, base.cost))
+    with pytest.raises(ValueError):
+        rb.ChaosGeometry(base, jax.random.PRNGKey(0), mode="exotic")
+
+
+def test_flaky_executor_deterministic():
+    class _Null:
+        def solve_batch(self, problems, **kw):
+            return list(problems)
+
+    def schedule(flaky, n=24):
+        out = []
+        for t in range(n):
+            try:
+                flaky.solve_batch([t])
+                out.append(False)
+            except rb.InjectedFault:
+                out.append(True)
+        return out
+
+    k = jax.random.PRNGKey(7)
+    s1 = schedule(rb.FlakyExecutor(_Null(), key=k, fail_rate=0.3))
+    s2 = schedule(rb.FlakyExecutor(_Null(), key=k, fail_rate=0.3))
+    assert s1 == s2 and any(s1) and not all(s1)
+    s3 = schedule(rb.FlakyExecutor(_Null(), fail_calls={1, 4}), n=6)
+    assert s3 == [False, True, False, False, True, False]
+    with pytest.raises(ValueError):
+        rb.FlakyExecutor(_Null(), fail_rate=0.5)  # rate without a key
+
+
+# --------------------------------------------------------------------------
+# Backpressure: bounded queue, degradation, dispatch-time expiry
+# --------------------------------------------------------------------------
+
+
+def test_bounded_queue_sheds_typed():
+    srv = _server(max_queue=2)  # not started: the queue only fills
+    srv.submit(_problem(), method="dense")
+    srv.submit(_problem(), method="dense")
+    with pytest.raises(ServerOverloaded):
+        srv.submit(_problem(), method="dense")
+    assert srv.metrics.get_counter("ot_shed_total") == 1.0
+
+
+def test_degrade_watermark_applies_overrides():
+    srv = _server(degrade_watermark=1, degrade={"max_iter": 7, "certify": False})
+    srv.submit(_problem(), method="dense", max_iter=2000)
+    srv.submit(_problem(), method="dense", max_iter=2000)
+    r1 = srv._queue.get()
+    r2 = srv._queue.get()
+    assert not r1.degraded and r1.opts["max_iter"] == 2000
+    assert r2.degraded and r2.opts["max_iter"] == 7
+    assert r2.opts["certify"] is False
+    assert srv.metrics.get_counter("ot_degraded_total") == 1.0
+
+
+def test_dispatch_time_expiry_under_skewed_clock():
+    """Regression (satellite 2): a request that ages out *between* collect
+    and dispatch is dropped at dispatch time with `RequestTimeout`, not
+    solved past its deadline."""
+    clock = rb.SkewedClock()
+    srv = _server(clock=clock)
+    fut = srv.submit(_problem(), method="dense", timeout_s=0.05, tol=1e-7)
+    req = srv._queue.get()
+    assert srv._expire([req]) == [req]  # fresh: survives the collect check
+    clock.advance(0.2)  # earlier groups "took" 200ms before this dispatch
+    srv._dispatch("dense", [req])
+    with pytest.raises(RequestTimeout):
+        fut.result(timeout=1)
+    assert srv.metrics.get_counter("ot_server_timeouts_total") == 1.0
+    assert srv.batches_dispatched == 0  # nothing was solved
+
+
+# --------------------------------------------------------------------------
+# Retry with backoff
+# --------------------------------------------------------------------------
+
+
+def test_dispatch_retries_then_succeeds():
+    sleeps = []
+    flaky = rb.FlakyExecutor(
+        BucketedExecutor(metrics=MetricsRegistry()), fail_calls={0, 1}
+    )
+    srv = _server(
+        executor=flaky, max_retries=2, backoff_s=0.01, sleep=sleeps.append
+    )
+    req = _request(_problem(), method="dense")
+    assert srv._dispatch_group("dense", [req])
+    sol = req.future.result(timeout=1)
+    assert sol.status_label == "converged"
+    assert flaky.calls == 3 and flaky.faults == 2
+    assert sleeps == [0.01, 0.02]  # exponential backoff
+    assert srv.metrics.get_counter("ot_retries_total") == 2.0
+
+
+def test_dispatch_retries_exhausted_fail_typed():
+    flaky = rb.FlakyExecutor(
+        BucketedExecutor(metrics=MetricsRegistry()), fail_calls={0, 1}
+    )
+    srv = _server(executor=flaky, max_retries=1, sleep=lambda s: None)
+    req = _request(_problem(), method="dense")
+    assert not srv._dispatch_group("dense", [req])
+    with pytest.raises(rb.InjectedFault):
+        req.future.result(timeout=1)
+    assert srv.metrics.get_counter("ot_retries_total") == 1.0
+
+
+# --------------------------------------------------------------------------
+# Circuit breakers
+# --------------------------------------------------------------------------
+
+
+def test_breaker_unit_state_machine():
+    clock = rb.SkewedClock(base=lambda: 0.0)
+    brk = rb.CircuitBreaker(
+        rb.BreakerPolicy(failure_threshold=2, reset_timeout_s=5.0), clock=clock
+    )
+    assert brk.allow() and brk.state_label == "closed"
+    brk.record_failure()
+    assert brk.allow()  # one failure below threshold: still closed
+    brk.record_failure()
+    assert brk.state_label == "open" and not brk.allow()
+    clock.advance(5.1)
+    assert brk.allow() and brk.state_label == "half_open"
+    brk.record_failure()  # failed probe: straight back to open
+    assert brk.state_label == "open"
+    clock.advance(5.1)
+    assert brk.allow()
+    brk.record_success()
+    assert brk.state_label == "closed" and brk.allow()
+
+
+def test_server_breaker_sheds_then_recovers():
+    clock = rb.SkewedClock()
+    flaky = rb.FlakyExecutor(
+        BucketedExecutor(metrics=MetricsRegistry()), fail_calls={0, 1}
+    )
+    srv = _server(
+        executor=flaky, clock=clock,
+        breaker=rb.BreakerPolicy(failure_threshold=2, reset_timeout_s=5.0),
+    )
+    for _ in range(2):  # two failed dispatches open the (bucket, method) breaker
+        r = _request(_problem(), method="dense")
+        srv._dispatch("dense", [r])
+        with pytest.raises(rb.InjectedFault):
+            r.future.result(timeout=1)
+    assert flaky.calls == 2
+    assert srv.metrics.get_gauge("ot_breaker_open") == 1.0
+
+    shed = _request(_problem(), method="dense")
+    srv._dispatch("dense", [shed])
+    with pytest.raises(CircuitOpen):
+        shed.future.result(timeout=1)
+    assert flaky.calls == 2  # shed without burning a dispatch
+    assert srv.metrics.get_counter("ot_shed_total") == 1.0
+
+    clock.advance(5.1)  # reset timeout: one half-open probe goes through
+    probe = _request(_problem(), method="dense")
+    srv._dispatch("dense", [probe])
+    assert probe.future.result(timeout=1).status_label == "converged"
+    assert flaky.calls == 3
+    assert srv.metrics.get_gauge("ot_breaker_open") == 0.0
+    (brk,) = srv._breakers.values()
+    assert brk.state_label == "closed"
+
+
+def test_breaker_families_are_independent():
+    """A poisoned (bucket, method) family sheds alone; the other bucket's
+    requests keep dispatching."""
+    flaky = rb.FlakyExecutor(
+        BucketedExecutor(metrics=MetricsRegistry()), fail_calls={0}
+    )
+    srv = _server(
+        executor=flaky,
+        breaker=rb.BreakerPolicy(failure_threshold=1, reset_timeout_s=60.0),
+    )
+    small = _request(_problem(n=32, m=32), method="dense")
+    srv._dispatch("dense", [small])  # injected failure opens (64, 64)
+    with pytest.raises(rb.InjectedFault):
+        small.future.result(timeout=1)
+    big = _request(_problem(n=100, m=100, seed=3), method="dense")
+    srv._dispatch("dense", [big])  # bucket (128, 128): own breaker, healthy
+    assert big.future.result(timeout=5).status_label == "converged"
+    small2 = _request(_problem(n=32, m=32), method="dense")
+    srv._dispatch("dense", [small2])
+    with pytest.raises(CircuitOpen):
+        small2.future.result(timeout=1)
+
+
+# --------------------------------------------------------------------------
+# Acceptance: serving under chaos
+# --------------------------------------------------------------------------
+
+
+def test_serving_under_chaos_recovers():
+    """~10% injected dispatch faults + two overflow-injected requests,
+    robust serving with retries: >= 95% of requests resolve converged, the
+    rest fail with typed errors, and zero degenerate results come back as
+    successes."""
+    N = 12
+    s = 800.0
+    flaky = rb.FlakyExecutor(
+        BucketedExecutor(metrics=MetricsRegistry()),
+        key=jax.random.PRNGKey(42), fail_rate=0.1,
+        fail_calls={1},  # at least one dispatch fault fires deterministically
+    )
+    srv = OTServer(
+        executor=flaky, max_batch=4, deadline_s=0.01,
+        robust=True, max_retries=3, backoff_s=0.001,
+    )
+    with srv:
+        futs = []
+        for i in range(N):
+            cap = rb.undersized_cap(s) if i in (3, 8) else None
+            opts = {"s": s, "tol": 1e-6, "max_iter": 4000}
+            if cap is not None:
+                opts["cap"] = cap
+            futs.append(srv.submit(
+                _problem(n=48, m=48, seed=i), method="spar_sink_log",
+                key=jax.random.PRNGKey(1000 + i), **opts,
+            ))
+        ok, typed_failures = 0, 0
+        for f in futs:
+            try:
+                sol = f.result(timeout=300)
+            except (RequestTimeout, ServerOverloaded, CircuitOpen,
+                    UnrecoverableSolve, rb.InjectedFault):
+                typed_failures += 1
+                continue
+            # no silent degradation: every success is genuinely converged
+            # and carries no overflow
+            assert isinstance(sol, rb.RobustSolution)
+            assert sol.recovered
+            assert sol.status_label == "converged"
+            assert not bool(np.asarray(sol.solution.overflowed))
+            ok += 1
+    assert ok + typed_failures == N
+    assert ok >= 0.95 * N
+    # the two overflow-injected requests escalated through the ladder
+    esc = srv.metrics.get_counter("ot_escalations_total")
+    assert esc >= 2.0

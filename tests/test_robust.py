@@ -1,0 +1,324 @@
+"""Self-healing solves (ISSUE 9): input validation raises typed
+`InvalidProblem`, the escalation ladder terminates, never downgrades a
+converged solution, is bitwise-free on the happy path, and genuinely
+recovers from induced degenerate/overflow failures."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.robust as rb
+from repro.batch import BucketedExecutor
+from repro.core import Geometry, OTProblem, UOTProblem, solve
+from repro.core.api import InvalidProblem
+from repro.core.api.solution import Solution
+from repro.core.sinkhorn import STATUS_LABELS, SinkhornResult
+from repro.obs.metrics import MetricsRegistry
+
+EPS = 0.05
+
+
+def _problem(n=32, m=32, eps=EPS, seed=0):
+    rng = np.random.default_rng(seed)
+    C = jnp.asarray(rng.random((n, m)))
+    return OTProblem(Geometry(C), jnp.ones(n) / n, jnp.ones(m) / m, eps)
+
+
+# --------------------------------------------------------------------------
+# Input validation (typed InvalidProblem at construction)
+# --------------------------------------------------------------------------
+
+
+def _parts(n=8):
+    rng = np.random.default_rng(0)
+    C = jnp.asarray(rng.random((n, n)))
+    a = jnp.ones(n) / n
+    return C, a
+
+
+@pytest.mark.parametrize(
+    "mutate",
+    [
+        lambda C, a: (C, a.at[0].set(jnp.nan), a),
+        lambda C, a: (C, a.at[0].set(-0.1), a),
+        lambda C, a: (C, jnp.zeros_like(a), a),
+        lambda C, a: (C, a, a.at[1].set(jnp.nan)),
+        lambda C, a: (C.at[0, 0].set(jnp.nan), a, a),
+        lambda C, a: (C.at[0, 0].set(-jnp.inf), a, a),
+    ],
+    ids=["nan_a", "neg_a", "zero_a", "nan_b", "nan_cost", "neginf_cost"],
+)
+def test_invalid_problem_raises(mutate):
+    C, a = _parts()
+    C2, a2, b2 = mutate(C, a)
+    with pytest.raises(InvalidProblem):
+        OTProblem(Geometry(C2), a2, b2, EPS)
+
+
+@pytest.mark.parametrize("eps", [0.0, -1.0, float("nan"), float("inf")])
+def test_invalid_eps_raises(eps):
+    C, a = _parts()
+    with pytest.raises(InvalidProblem):
+        OTProblem(Geometry(C), a, a, eps)
+
+
+def test_invalid_uot_lam_raises():
+    C, a = _parts()
+    with pytest.raises(InvalidProblem):
+        UOTProblem(Geometry(C), a, a, EPS, lam=float("nan"))
+    with pytest.raises(InvalidProblem):
+        UOTProblem(Geometry(C), a, a, EPS, lam=0.0)
+    # lam=inf is the balanced limit — legal
+    UOTProblem(Geometry(C), a, a, EPS, lam=float("inf"))
+
+
+def test_plus_inf_cost_allowed():
+    # WFR / cutoff geometries legitimately carry +inf entries
+    C, a = _parts()
+    OTProblem(Geometry(C.at[0, 0].set(jnp.inf)), a, a, EPS)
+
+
+def test_validate_false_escape_hatch():
+    C, a = _parts()
+    p = OTProblem(Geometry(C), a.at[0].set(jnp.nan), a, EPS, validate=False)
+    assert bool(jnp.isnan(p.a[0]))
+    p.check_valid()  # still a no-op: the caller opted out
+
+
+def test_traced_construction_skips_validation():
+    C, a = _parts()
+
+    @jax.jit
+    def val(a_):
+        return OTProblem(Geometry(C), a_, a_, EPS).a.sum()
+
+    assert np.isfinite(float(val(a)))
+
+
+def test_replace_revalidates():
+    C, a = _parts()
+    p = OTProblem(Geometry(C), a, a, EPS)
+    with pytest.raises(InvalidProblem):
+        dataclasses.replace(p, eps=-1.0)
+
+
+# --------------------------------------------------------------------------
+# Ladder unit tests (stubbed solve: fast, no compiles)
+# --------------------------------------------------------------------------
+
+
+def _fake(problem, method="dense", status="stall", domain="scaling",
+          overflowed=None, n_iter=5, value=1.0):
+    n, m = problem.shape
+    idx = None if status is None else STATUS_LABELS.index(status)
+    res = SinkhornResult(
+        jnp.zeros(n), jnp.zeros(m), jnp.asarray(n_iter), jnp.asarray(1e-3),
+        None if idx is None else jnp.asarray(idx), None,
+    )
+    return Solution(
+        method=method, problem=problem, value=jnp.asarray(value), result=res,
+        domain=domain,
+        overflowed=None if overflowed is None else jnp.asarray(overflowed),
+    )
+
+
+@pytest.mark.parametrize(
+    "method,opts,status,domain,overflowed",
+    [
+        ("dense", {}, "stall", "scaling", None),
+        ("log", {"max_iter": 100}, "max_iter", "log", None),
+        ("dense", {}, "degenerate", "scaling", None),
+        ("log", {}, "non_finite", "log", None),
+        ("spar_sink_log", {"key": jax.random.PRNGKey(0), "s": 64.0, "cap": 32},
+         "converged", "log", True),
+    ],
+    ids=["stall", "max_iter", "degenerate", "non_finite", "overflow"],
+)
+def test_ladder_terminates(monkeypatch, method, opts, status, domain, overflowed):
+    """A solve that never improves exhausts the ladder within
+    ``policy.max_attempts`` and reports ``recovered=False`` honestly."""
+    calls = []
+
+    def stub(problem, method="dense", **kw):
+        calls.append((method, kw))
+        return _fake(problem, method, status, domain, overflowed)
+
+    monkeypatch.setattr("repro.robust.ladder.solve", stub)
+    p = _problem()
+    policy = rb.EscalationPolicy(max_attempts=4)
+    rs = rb.solve_robust(p, method, policy=policy, **opts)
+    assert isinstance(rs, rb.RobustSolution)
+    assert not rs.recovered
+    assert 1 <= len(rs.attempts) <= policy.max_attempts
+    assert rs.attempts[0].action == "initial"
+    assert rs.total_matvecs == sum(2 * t.n_iter for t in rs.attempts)
+
+
+def test_ladder_overflow_grows_cap(monkeypatch):
+    def stub(problem, method="dense", **kw):
+        return _fake(problem, method, "converged", "log", overflowed=True)
+
+    monkeypatch.setattr("repro.robust.ladder.solve", stub)
+    policy = rb.EscalationPolicy(max_attempts=4, cap_growth=2.0)
+    rs = rb.solve_robust(
+        _problem(), "spar_sink_log", policy=policy,
+        key=jax.random.PRNGKey(0), s=64.0, cap=32,
+    )
+    caps = [t.cap for t in rs.attempts]
+    assert caps == [32, 64, 128, 256]
+    assert all(t.action == "resketch" for t in rs.attempts[1:])
+
+
+def test_ladder_stall_bumps_then_retightens(monkeypatch):
+    """stall -> eps-bumped log solve -> warm-started re-tighten at the
+    original eps, accepted; the retighten call carries init=potentials."""
+    p = _problem()
+    calls = []
+
+    def stub(problem, method="dense", **kw):
+        calls.append((float(problem.eps), method, dict(kw)))
+        if float(problem.eps) > float(p.eps):  # the bumped stepping stone
+            return _fake(problem, method, "converged", "log")
+        return _fake(problem, method, "converged", "log")
+
+    monkeypatch.setattr("repro.robust.ladder.solve", stub)
+    first = _fake(p, "dense", "stall", "scaling")
+    rs = rb.escalate_from(p, "dense", first, metrics=MetricsRegistry())
+    assert [t.action for t in rs.attempts] == ["initial", "eps_bump", "retighten"]
+    assert rs.recovered
+    assert rs.attempts[1].eps == pytest.approx(float(p.eps) * 10.0)
+    assert rs.attempts[2].eps == pytest.approx(float(p.eps))
+    assert "init" in calls[-1][2]  # warm-started re-tighten
+    assert calls[0][1] == "log" and calls[-1][1] == "log"
+
+
+def test_ladder_never_downgrades_best(monkeypatch):
+    """A converged-but-overflowed first attempt outranks a later
+    non-converged rung: the final solution is the best attempt, honestly
+    flagged recovered=False."""
+    p = _problem()
+    first = _fake(p, "spar_sink_log", "converged", "log", overflowed=True,
+                  value=7.0)
+
+    def stub(problem, method="dense", **kw):
+        return _fake(problem, method, "stall", "log", value=-3.0)
+
+    monkeypatch.setattr("repro.robust.ladder.solve", stub)
+    policy = rb.EscalationPolicy(max_attempts=3)
+    rs = rb.escalate_from(
+        p, "spar_sink_log", first, policy=policy, metrics=MetricsRegistry(),
+        key=jax.random.PRNGKey(0), s=64.0, cap=32,
+    )
+    assert not rs.recovered
+    assert rs.solution is first
+    assert float(rs.value) == 7.0
+
+
+def test_ladder_converged_first_returns_immediately(monkeypatch):
+    def boom(problem, **kw):  # escalating at all would be a bug
+        raise AssertionError("ladder escalated a converged solve")
+
+    monkeypatch.setattr("repro.robust.ladder.solve", boom)
+    p = _problem()
+    first = _fake(p, "log", "converged", "log")
+    rs = rb.escalate_from(p, "log", first, metrics=MetricsRegistry())
+    assert rs.recovered and not rs.escalated
+    assert rs.solution is first and len(rs.attempts) == 1
+
+
+def test_ladder_counts_escalations(monkeypatch):
+    reg = MetricsRegistry()
+    monkeypatch.setattr(
+        "repro.robust.ladder.solve",
+        lambda problem, method="dense", **kw: _fake(problem, method, "stall", "log"),
+    )
+    p = _problem()
+    first = _fake(p, "log", "stall", "log")
+    rs = rb.escalate_from(
+        p, "log", first, policy=rb.EscalationPolicy(max_attempts=3), metrics=reg
+    )
+    assert reg.get_counter("ot_escalations_total") == len(rs.attempts) - 1 > 0
+
+
+# --------------------------------------------------------------------------
+# Happy path: bitwise-free, nothing extra compiled
+# --------------------------------------------------------------------------
+
+
+def test_robust_happy_path_bitwise():
+    p = _problem()
+    plain = solve(p, method="dense", tol=1e-9)
+    rs = solve(p, method="dense", robust=True, tol=1e-9)
+    assert isinstance(rs, rb.RobustSolution)
+    assert rs.recovered and len(rs.attempts) == 1
+    f1, g1 = rs.potentials
+    f2, g2 = plain.potentials
+    assert bool(jnp.array_equal(f1, f2)) and bool(jnp.array_equal(g1, g2))
+    assert float(rs.value) == float(plain.value)
+    # the Solution surface passes through the wrapper
+    assert rs.status_label == "converged"
+    assert rs.solution.method == "dense"
+
+
+def test_executor_robust_happy_path_no_extra_compiles():
+    probs = [_problem(seed=i) for i in range(4)]
+    ex = BucketedExecutor(metrics=MetricsRegistry())
+    plain = ex.solve_batch(probs, method="log", tol=1e-7, max_iter=4000)
+    compiled = ex.compile_count
+    wrapped = ex.solve_batch(
+        probs, method="log", tol=1e-7, max_iter=4000, robust=True
+    )
+    assert ex.compile_count == compiled  # ladder added zero compiles
+    for sol, rsol in zip(plain, wrapped):
+        assert isinstance(rsol, rb.RobustSolution)
+        assert rsol.recovered and len(rsol.attempts) == 1
+        u1, v1 = sol.result.u, sol.result.v
+        u2, v2 = rsol.solution.result.u, rsol.solution.result.v
+        assert bool(jnp.array_equal(u1, u2)) and bool(jnp.array_equal(v1, v2))
+
+
+# --------------------------------------------------------------------------
+# Real recoveries (induced failures, end to end)
+# --------------------------------------------------------------------------
+
+
+def test_recovers_degenerate_via_log_domain():
+    p = rb.corrupt_scaling_kernel(_problem(), jax.random.PRNGKey(1), mode="zero")
+    rs = rb.solve_robust(p, method="dense", tol=1e-7)
+    assert rs.recovered
+    assert [t.action for t in rs.attempts] == ["initial", "log_domain"]
+    assert rs.attempts[0].status == "degenerate"
+    assert rs.status_label == "converged"
+    # the recovered value matches the clean dense solve
+    clean = solve(_problem(), method="dense", tol=1e-7)
+    assert float(rs.value) == pytest.approx(float(clean.value), rel=1e-5)
+
+
+def test_recovers_overflow_via_resketch():
+    p = _problem(n=48, m=48)
+    s = 400.0
+    rs = rb.solve_robust(
+        p, method="spar_sink_log", key=jax.random.PRNGKey(2),
+        s=s, cap=rb.undersized_cap(s), tol=1e-7,
+    )
+    assert rs.recovered
+    assert rs.attempts[0].overflowed is True
+    assert rs.attempts[-1].overflowed is False
+    caps = [t.cap for t in rs.attempts]
+    assert caps == sorted(caps) and caps[-1] > caps[0]
+
+
+def test_warm_start_init_reduces_iterations():
+    p = _problem(n=48, m=48, eps=0.02)
+    cold = solve(p, method="log", tol=1e-9)
+    warm = solve(p, method="log", tol=1e-9, init=cold.potentials)
+    assert int(warm.result.n_iter) < int(cold.result.n_iter)
+    assert int(warm.result.n_iter) <= 2
+
+
+def test_solve_policy_implies_robust():
+    rs = solve(_problem(), method="dense",
+               policy=rb.EscalationPolicy(max_attempts=2), tol=1e-9)
+    assert isinstance(rs, rb.RobustSolution)

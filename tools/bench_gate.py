@@ -35,7 +35,7 @@ import tempfile
 
 #: suites gated by default (BENCH_<suite>.json); `scale` and `certify`
 #: carry exploratory sweeps and can be opted in via --suites
-DEFAULT_SUITES = ("batch", "time", "eps", "serve")
+DEFAULT_SUITES = ("batch", "time", "eps", "serve", "robust")
 
 
 def _load(path: str) -> dict[str, dict]:

@@ -1,8 +1,8 @@
 """Guard the redesigned public API surface against silent drift.
 
 Asserts that each guarded module's ``__all__`` (``repro.core``,
-``repro.core.api``, ``repro.batch``, ``repro.kernels``, ``repro.obs``)
-exactly matches
+``repro.core.api``, ``repro.batch``, ``repro.kernels``, ``repro.obs``,
+``repro.robust``) exactly matches
 the actually-exported public names: every declared name must resolve,
 every resolvable public name must be declared, no duplicates, and the
 list must stay sorted. Also pins the solver-registry surface — the
@@ -20,7 +20,26 @@ import sys
 import types
 
 MODULES = ("repro.core", "repro.core.api", "repro.batch", "repro.kernels",
-           "repro.obs")
+           "repro.obs", "repro.robust")
+
+# the self-healing surface (sorted); update deliberately together with the
+# README "Robustness" section
+EXPECTED_ROBUST = (
+    "Attempt",
+    "BREAKER_STATES",
+    "BreakerPolicy",
+    "ChaosGeometry",
+    "CircuitBreaker",
+    "EscalationPolicy",
+    "FlakyExecutor",
+    "InjectedFault",
+    "RobustSolution",
+    "SkewedClock",
+    "corrupt_scaling_kernel",
+    "escalate_from",
+    "solve_robust",
+    "undersized_cap",
+)
 
 # the registered method surface (sorted); update deliberately when adding
 # a solver, together with the registry-table docstring and the README
@@ -106,10 +125,23 @@ def check_certify_surface() -> list[str]:
     return errors
 
 
+def check_robust_surface() -> list[str]:
+    """Pin the `repro.robust` self-healing surface exactly."""
+    import repro.robust
+
+    got = tuple(repro.robust.__all__)
+    if got != EXPECTED_ROBUST:
+        return [
+            f"repro.robust: expected __all__ {list(EXPECTED_ROBUST)}, got {list(got)}"
+        ]
+    return []
+
+
 def main() -> int:
     errors = [e for m in MODULES for e in check_module(m)]
     errors += check_registry()
     errors += check_certify_surface()
+    errors += check_robust_surface()
     for e in errors:
         print(f"API SURFACE DRIFT: {e}", file=sys.stderr)
     if not errors:
